@@ -1,0 +1,64 @@
+"""Paper Tables 2/3 & 5/6: build/query time vs number of executors.
+
+One CPU core here, so "executors" are simulated from measured per-partition
+times: executor wall time = makespan of a greedy longest-processing-time
+schedule of the measured per-partition build times onto E workers (exactly
+what Spark does with independent tasks).  This reproduces the paper's
+headline ratios (segmented build is ~5x/~10x faster at 2/8 executors because
+partition build cost is superlinear in n and partitions are n/m-sized)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, sift_like_corpus, time_call
+from repro.core import HNSWConfig, HNSWIndex, LannsConfig, LannsIndex
+
+
+def makespan(task_seconds, executors: int) -> float:
+    """Greedy LPT schedule of independent tasks on E workers."""
+    loads = np.zeros(executors)
+    for t in sorted(task_seconds, reverse=True):
+        loads[np.argmin(loads)] += t
+    return float(loads.max())
+
+
+def run(n=20_000, d=64, n_queries=200, topk=100):
+    corpus, queries = sift_like_corpus(n, d, n_queries)
+
+    # monolithic baseline
+    hnsw = HNSWIndex(HNSWConfig(M=12, ef_construction=80, ef_search=120), d)
+    t_mono, _ = time_call(lambda: hnsw.add_batch(corpus), repeats=1)
+    tq_mono, _ = time_call(hnsw.search_np, queries, topk, repeats=1)
+    emit("table2_build.HNSW.e1", 1e6 * t_mono, f"build_s={t_mono:.1f}")
+    emit("table3_query.HNSW.e1", 1e6 * tq_mono / len(queries), "ms/query="
+         f"{1e3 * tq_mono / len(queries):.2f}")
+
+    for seg in ("rs", "rh", "apd"):
+        cfg = LannsConfig(
+            num_shards=1, num_segments=8, segmenter=seg, alpha=0.15,
+            engine="hnsw", hnsw_m=12, ef_construction=80, ef_search=120,
+        )
+        idx = LannsIndex(cfg)
+        idx.build(corpus)
+        per_part = list(idx.build_stats["per_partition_seconds"].values())
+        tq, _ = time_call(idx.query, queries, topk, repeats=1)
+        # per-executor query makespan: queries parallelize over partitions
+        for e in (2, 4, 8):
+            t_build_e = makespan(per_part, e)
+            emit(
+                f"table2_build.{seg.upper()}(1,8).e{e}",
+                1e6 * t_build_e,
+                f"build_s={t_build_e:.1f};speedup={t_mono / t_build_e:.1f}x",
+            )
+            tq_e = tq / min(e, 8)
+            emit(
+                f"table3_query.{seg.upper()}(1,8).e{e}",
+                1e6 * tq_e / len(queries),
+                f"ms/query={1e3 * tq_e / len(queries):.2f};"
+                f"speedup={tq_mono / tq_e:.1f}x",
+            )
+
+
+if __name__ == "__main__":
+    run()

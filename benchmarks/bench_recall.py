@@ -1,0 +1,56 @@
+"""Paper Tables 1 & 4: recall of (n, m)-partitioned LANNS vs monolithic HNSW.
+
+Reduced-scale protocol (SIFT64-20k): same methods, same (1,8)/(2,4)
+partitionings, same alpha=0.15, topK=100, R@{1,5,10,15,50,100}."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, ground_truth, sift_like_corpus, time_call
+from repro.core import HNSWConfig, HNSWIndex, LannsConfig, LannsIndex, recall_table
+
+KS = (1, 5, 10, 15, 50, 100)
+
+
+def run(n=20_000, d=64, n_queries=300, topk=100, engine="scan"):
+    corpus, queries = sift_like_corpus(n, d, n_queries)
+    td, ti = ground_truth(corpus, queries, topk)
+    results = {}
+
+    # monolithic HNSW baseline (paper's single-machine row)
+    hnsw = HNSWIndex(HNSWConfig(M=12, ef_construction=80, ef_search=120), d)
+    t_build, _ = time_call(lambda: hnsw.add_batch(corpus), repeats=1)
+    t_query, (dh, ih) = time_call(hnsw.search_np, queries, topk, repeats=1)
+    results["HNSW"] = recall_table(ih, ti, KS)
+    emit(
+        "table1_recall.HNSW",
+        1e6 * t_query / len(queries),
+        ";".join(f"R@{k}={v:.4f}" for k, v in results["HNSW"].items())
+        + f";build_s={t_build:.1f}",
+    )
+
+    for seg, (S, m) in [
+        (s, p) for s in ("rs", "rh", "apd") for p in ((1, 8), (2, 4))
+    ]:
+        cfg = LannsConfig(
+            num_shards=S, num_segments=m, segmenter=seg, alpha=0.15,
+            engine=engine, hnsw_m=12, ef_construction=80, ef_search=120,
+            topk_confidence=0.95,
+        )
+        idx = LannsIndex(cfg)
+        t_build, _ = time_call(lambda: idx.build(corpus), repeats=1)
+        t_query, (dl, il) = time_call(idx.query, queries, topk, repeats=1)
+        name = f"{seg.upper()}({S},{m})"
+        results[name] = recall_table(il, ti, KS)
+        emit(
+            f"table1_recall.{name}",
+            1e6 * t_query / len(queries),
+            ";".join(f"R@{k}={v:.4f}" for k, v in results[name].items())
+            + f";build_s={t_build:.1f}",
+        )
+    return results
+
+
+if __name__ == "__main__":
+    run()

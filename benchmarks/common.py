@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: datasets, timing, CSV emission.
+
+CPU-scale protocol: the paper's SIFT1M/GIST1M are mirrored by seeded
+clustered synthetics at reduced n (this container is one CPU core; the paper
+used Spark clusters).  Scale factors are printed with every table so numbers
+are read as *relative* reproductions: the paper's claims under test are the
+RATIOS (segmented-vs-monolithic build speedup, per-segmenter recall ordering,
+spill trade-offs), which are scale-free.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import brute_force_topk
+from repro.data.synthetic import clustered_vectors
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """One CSV row in the required ``name,us_per_call,derived`` format."""
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def sift_like_corpus(n=20_000, d=64, n_queries=500, seed=0):
+    from repro.data.synthetic import sift_like
+
+    return sift_like(n, d, n_queries=n_queries, seed=seed)
+
+
+def ground_truth(corpus, queries, k=100):
+    return brute_force_topk(queries, corpus, k)
+
+
+def time_call(fn, *args, repeats=3, **kw):
+    """Median wall time in seconds."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out

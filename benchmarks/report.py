@@ -1,0 +1,65 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts (keeps the document reproducible from data).
+
+  PYTHONPATH=src:. python -m benchmarks.report > results/roofline_sections.md
+"""
+
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import load_records, make_table
+
+GiB = 2**30
+
+
+def dryrun_section():
+    out = ["## §Dry-run — lower+compile over the production meshes\n"]
+    recs = [r for r in load_records() if r.get("status") == "ok"]
+    for mesh in ("16x16", "2x16x16"):
+        rows = [r for r in recs if r["mesh"] == mesh]
+        out.append(f"\n### mesh {mesh} ({len(rows)} cells, all compile)\n")
+        out.append(
+            "| arch | cell | compile s | args GiB/dev | temp GiB/dev "
+            "(tpu-est) | HLO flops/dev | coll bytes/dev | note |"
+        )
+        out.append("|---|---|---|---|---|---|---|---|")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["cell"])):
+            mem = r["memory"]
+            la = r.get("cost_loopaware", {})
+            tpu_tmp = r.get("temp_bytes_tpu_estimate", mem["temp_bytes"])
+            out.append(
+                f"| {r['arch']} | {r['cell']} | "
+                f"{r.get('compile_seconds', 0):.0f} | "
+                f"{mem['argument_bytes'] / GiB:.2f} | "
+                f"{mem['temp_bytes'] / GiB:.2f} ({tpu_tmp / GiB:.2f}) | "
+                f"{la.get('flops', 0):.2e} | "
+                f"{la.get('collective_total_bytes', 0):.2e} | "
+                f"{r.get('note', '')[:60]} |"
+            )
+    return "\n".join(out)
+
+
+def roofline_section(mesh="16x16"):
+    rows = make_table(mesh=mesh)
+    out = [f"\n## §Roofline — per (arch x cell), mesh {mesh}\n"]
+    out.append(
+        "| arch | cell | compute s | memory s | collective s | dominant | "
+        "useful/HLO | roofline frac | fits 16G |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"])):
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(dryrun_section())
+    print(roofline_section("16x16"))
+    print(roofline_section("2x16x16"))

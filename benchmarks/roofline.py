@@ -1,0 +1,125 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x cell x mesh) record:
+  compute    = HLO_flops_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device * scan_trips_correction / ICI_BW
+(HLO numbers from compiled.cost_analysis() are already per-device post-SPMD.)
+
+Collectives inside rolled loops (scan over layers / microbatches) appear once
+in the HLO text; we scale by the recorded trip count product when the op sits
+inside a while body — the dry-run records the max trip count, which for our
+step functions is the layer-scan (x microbatch scan for training), so the
+correction uses trips = scan_trips * num_micro_if_train.  This is an upper
+bound (some collectives sit outside the loops); the §Perf iterations use the
+same estimator before/after so deltas are comparable.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load_records(dry_dir: str = "results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_terms(rec: dict) -> dict:
+    la = rec.get("cost_loopaware")
+    if la:  # loop-aware HLO walk (launch/hlo_cost.py) — the accurate totals
+        flops = la["flops"]
+        bytes_acc = la["bytes"]
+        coll_total = la["collective_total_bytes"]
+    else:  # fall back to XLA aggregate (counts while bodies once!)
+        flops = rec["cost"]["flops"]
+        bytes_acc = rec["cost"]["bytes_accessed"]
+        coll_total = rec["collectives"]["total_bytes"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_total / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = rec.get("model_flops_per_step", 0.0)
+    n_dev = rec.get("n_devices", 256)
+    useful = (mf / n_dev) / flops if flops else 0.0
+    bound = max(t_compute, t_memory, t_coll)
+    # roofline fraction: useful model flops over what the dominant term costs
+    frac = ((mf / n_dev) / PEAK_FLOPS) / bound if bound else 0.0
+    return {
+        "arch": rec["arch"],
+        "cell": rec["cell"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "fits_hbm": (
+            rec["memory"]["argument_bytes"]
+            + rec.get("temp_bytes_tpu_estimate", rec["memory"]["temp_bytes"])
+        ) < 16e9,
+        "note": rec.get("note", ""),
+    }
+
+
+def make_table(dry_dir: str = "results/dryrun", mesh: str = "16x16"):
+    rows = []
+    for rec in load_records(dry_dir):
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        rows.append(roofline_terms(rec))
+    return rows
+
+
+def format_markdown(rows) -> str:
+    hdr = (
+        "| arch | cell | compute s | memory s | collective s | dominant | "
+        "useful/HLO | roofline frac | fits |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    body = ""
+    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"])):
+        body += (
+            f"| {r['arch']} | {r['cell']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |\n"
+        )
+    return hdr + body
+
+
+def run():
+    from benchmarks.common import emit
+
+    for mesh in ("16x16", "2x16x16"):
+        rows = make_table(mesh=mesh)
+        for r in rows:
+            bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+            emit(
+                f"roofline.{mesh}.{r['arch']}.{r['cell']}",
+                1e6 * bound,
+                f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+                f"compute_s={r['t_compute_s']:.2e};memory_s={r['t_memory_s']:.2e};"
+                f"collective_s={r['t_collective_s']:.2e}",
+            )
+
+
+if __name__ == "__main__":
+    run()

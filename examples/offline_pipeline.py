@@ -1,0 +1,73 @@
+"""End-to-end offline framework (paper §5): the full production pipeline.
+
+1. learn a shared segmenter on a subsample      (paper Fig. 5)
+2. two-level partition + parallel index build   (paper Fig. 6)
+3. fault-injected resume (kill + restart)       (paper §5.3.1)
+4. distributed batched querying + 2-level merge (paper Fig. 7)
+5. brute-force ground truth + recall report     (paper §5.4)
+
+    PYTHONPATH=src python examples/offline_pipeline.py
+"""
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (
+    LannsConfig, LannsIndex, brute_force_topk, per_shard_topk, recall_table,
+)
+from repro.core.lanns import _build_one_partition
+from repro.data.synthetic import clustered_vectors
+
+N, D, NQ, TOPK = 15_000, 64, 400, 100
+corpus = clustered_vectors(N, D, n_clusters=128, seed=0)
+queries = clustered_vectors(NQ, D, n_clusters=128, seed=1)
+workdir = tempfile.mkdtemp(prefix="lanns_")
+
+cfg = LannsConfig(num_shards=2, num_segments=4, segmenter="apd",
+                  alpha=0.15, engine="hnsw", hnsw_m=12, ef_construction=80,
+                  ef_search=120)
+
+# -- 1+2: learn segmenter, partition, build (with persistence) ---------------
+print("== building with checkpointed partitions ==")
+t0 = time.time()
+index = LannsIndex(cfg)
+index.fit(corpus)  # pre-learned segmenter, shared across shards (§5.1)
+
+# -- 3: fault injection — build only half the partitions, "crash", resume ----
+assignment = index.partitioner.assign(corpus, np.arange(N))
+built = 0
+for s in range(cfg.num_shards):
+    for g in range(cfg.num_segments):
+        if built >= 4:  # "crash" after 4 of 8 partitions
+            break
+        rows = assignment.rows[s][g]
+        _, _, payload, secs = _build_one_partition(
+            (s, g, corpus[rows], np.arange(N)[rows], cfg.engine,
+             cfg.hnsw_config())
+        )
+        index._save_partition(workdir, s, g, payload)
+        built += 1
+print(f"   simulated crash after {built} partitions "
+      f"({time.time() - t0:.1f}s); resuming ...")
+
+index2 = LannsIndex(cfg)
+index2.fit(corpus)
+index2.build(corpus, resume_dir=workdir)  # skips the 4 persisted partitions
+print(f"   resume completed: {len(index2.partitions)} partitions, "
+      f"build wall {index2.build_stats['build_wall_seconds']:.1f}s")
+
+# -- 4: batched querying with the two-level merge -----------------------------
+pstk = per_shard_topk(TOPK, cfg.num_shards, cfg.topk_confidence)
+print(f"== querying (perShardTopK={pstk} of topK={TOPK}) ==")
+t0 = time.time()
+d, i, stats = index2.query(queries, TOPK, return_stats=True)
+print(f"   {1e3 * (time.time() - t0) / NQ:.2f} ms/query, {stats}")
+
+# -- 5: ground truth + recall table -------------------------------------------
+print("== brute-force ground truth (partitioned, merged by queryId) ==")
+td, ti = brute_force_topk(queries, corpus, TOPK, num_partitions=4)
+print("   recall:", {k: round(v, 4) for k, v in recall_table(i, ti).items()})
+shutil.rmtree(workdir)

@@ -1,0 +1,32 @@
+"""Quickstart: build a LANNS index, query it, check recall vs brute force.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import LannsConfig, LannsIndex, brute_force_topk, recall_table
+from repro.data.synthetic import sift_like
+
+# 1. a corpus and held-out same-distribution queries (SIFT-like synthetic)
+corpus, queries = sift_like(10_000, 64, n_queries=200, seed=0)
+
+# 2. a (2 shards x 4 segments) LANNS index with the APD segmenter —
+#    the paper's recommended configuration family
+cfg = LannsConfig(
+    num_shards=2,
+    num_segments=4,
+    segmenter="apd",      # 'rs' | 'rh' | 'apd'
+    alpha=0.15,           # virtual-spill band (~30% of queries spill/level)
+    engine="scan",        # 'hnsw' (paper) | 'scan' (TPU-native dense)
+)
+index = LannsIndex(cfg).build(corpus)
+print("partition sizes:", index.build_stats["partition_sizes"])
+
+# 3. query with two-level merge + perShardTopK
+dists, ids, stats = index.query(queries, topk=100, return_stats=True)
+print("routing stats:", stats)
+
+# 4. recall vs exact brute force
+true_d, true_i = brute_force_topk(queries, corpus, 100)
+print("recall:", {k: round(v, 4) for k, v in recall_table(ids, true_i).items()})

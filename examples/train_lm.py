@@ -1,0 +1,18 @@
+"""End-to-end training driver example: train a small LM for a few hundred
+steps with the full substrate (pipeline, optimizer, checkpoints, resume).
+
+    PYTHONPATH=src python examples/train_lm.py            # ~200 steps on CPU
+    PYTHONPATH=src python examples/train_lm.py --steps 50 # quicker
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or [
+        "--arch", "smollm-360m", "--steps", "200", "--batch", "8",
+        "--seq", "128", "--lr", "3e-3", "--ckpt-dir", "/tmp/lm_ckpt",
+        "--ckpt-every", "100",
+    ]
+    raise SystemExit(main(args))

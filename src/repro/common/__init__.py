@@ -1,0 +1,21 @@
+from repro.common.utils import (
+    Timer,
+    pad_to,
+    pad_axis_to,
+    round_up,
+    splitmix64,
+    stable_hash_u64,
+    tree_bytes,
+    tree_count,
+)
+
+__all__ = [
+    "Timer",
+    "pad_to",
+    "pad_axis_to",
+    "round_up",
+    "splitmix64",
+    "stable_hash_u64",
+    "tree_bytes",
+    "tree_count",
+]

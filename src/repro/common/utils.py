@@ -1,0 +1,110 @@
+"""Shared utilities: hashing, padding, timing, pytree accounting.
+
+Everything here is dependency-light (numpy + jax only) and deterministic.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterable
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Hashing — splitmix64 is the canonical cheap 64-bit mixer; we use it for the
+# LANNS level-1 hash sharding ("when a point is inserted, it is hashed to ONE
+# particular shard using the key of the data point", §4.1).  It must be (a)
+# deterministic across hosts, (b) well mixed so shards are balanced, which the
+# paper relies on ("the data distribution in our shards is uniform", §5.1).
+# ---------------------------------------------------------------------------
+
+_SM64_C1 = np.uint64(0xBF58476D1CE4E5B9)
+_SM64_C2 = np.uint64(0x94D049BB133111EB)
+_SM64_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer over uint64 arrays."""
+    x = np.asarray(x, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = x + _SM64_GAMMA
+        z = (z ^ (z >> np.uint64(30))) * _SM64_C1
+        z = (z ^ (z >> np.uint64(27))) * _SM64_C2
+        z = z ^ (z >> np.uint64(31))
+    return z
+
+
+def stable_hash_u64(keys: np.ndarray, salt: int = 0) -> np.ndarray:
+    """Deterministic 64-bit hash of integer keys (any integer dtype)."""
+    k = np.asarray(keys).astype(np.uint64, copy=False)
+    return splitmix64(k ^ np.uint64(salt))
+
+
+# ---------------------------------------------------------------------------
+# Shape helpers
+# ---------------------------------------------------------------------------
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
+    """Pad axis 0 of ``a`` up to length ``n`` with ``fill``."""
+    if a.shape[0] == n:
+        return a
+    if a.shape[0] > n:
+        raise ValueError(f"cannot pad {a.shape[0]} down to {n}")
+    pad_width = [(0, n - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return np.pad(a, pad_width, constant_values=fill)
+
+
+def pad_axis_to(a: np.ndarray, axis: int, n: int, fill=0) -> np.ndarray:
+    if a.shape[axis] == n:
+        return a
+    pad_width = [(0, 0)] * a.ndim
+    pad_width[axis] = (0, n - a.shape[axis])
+    return np.pad(a, pad_width, constant_values=fill)
+
+
+# ---------------------------------------------------------------------------
+# Timing / accounting
+# ---------------------------------------------------------------------------
+
+
+class Timer:
+    """Context-manager wall timer. ``with Timer() as t: ...; t.seconds``."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False
+
+
+def tree_count(tree) -> int:
+    """Total number of array elements in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def batched(it: Iterable, n: int):
+    """Yield lists of up to n items."""
+    buf = []
+    for x in it:
+        buf.append(x)
+        if len(buf) == n:
+            yield buf
+            buf = []
+    if buf:
+        yield buf

@@ -1,0 +1,5 @@
+"""Assigned-architecture configs.  ``registry.get_arch(id)`` is the entry."""
+
+from repro.configs.registry import ARCH_IDS, get_arch
+
+__all__ = ["ARCH_IDS", "get_arch"]

@@ -1,0 +1,171 @@
+"""Arch registry: the 10 assigned architectures with exact published configs.
+
+Sources as assigned:
+  codeqwen1.5-7b        [hf:Qwen/CodeQwen1.5-7B]
+  qwen2-72b             [arXiv:2407.10671]
+  smollm-360m           [hf:HuggingFaceTB/SmolLM-360M]
+  deepseek-moe-16b      [arXiv:2401.06066]
+  deepseek-v2-lite-16b  [arXiv:2405.04434]
+  dimenet               [arXiv:2003.03123]
+  autoint               [arXiv:1810.11921]
+  din                   [arXiv:1706.06978]
+  sasrec                [arXiv:1808.09781]
+  xdeepfm               [arXiv:1803.05170]
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+from repro.configs.families import Arch, GNNArch, LMArch, RecsysArch
+
+ARCH_IDS = (
+    "codeqwen1.5-7b",
+    "qwen2-72b",
+    "smollm-360m",
+    "deepseek-moe-16b",
+    "deepseek-v2-lite-16b",
+    "dimenet",
+    "autoint",
+    "din",
+    "sasrec",
+    "xdeepfm",
+)
+
+# Criteo-style vocab mix for the 39-field archs: 13 integer-bucket fields
+# (small vocab) + 26 categorical fields (large, hash-bucketed).  Totals ~27M
+# rows — a realistic "huge sparse table" without being gratuitous.
+CRITEO39_VOCABS = tuple([1000] * 13 + [1_000_000] * 26)
+
+
+@lru_cache(maxsize=None)
+def get_arch(arch_id: str) -> Arch:
+    from repro.models.moe import MoEConfig
+    from repro.models.recsys import (
+        AutoIntConfig,
+        DINConfig,
+        SASRecConfig,
+        XDeepFMConfig,
+    )
+    from repro.models.transformer import TransformerConfig
+    from repro.models.dimenet import DimeNetConfig
+
+    if arch_id == "codeqwen1.5-7b":
+        # 32L d=4096 32H (GQA kv=32 => MHA-style kv) d_ff=13440 vocab=92416,
+        # QKV bias (qwen1.5 arch)
+        return LMArch(
+            arch_id,
+            TransformerConfig(
+                name=arch_id, n_layers=32, d_model=4096, n_heads=32,
+                n_kv_heads=32, head_dim=128, d_ff=13440, vocab=92416,
+                qkv_bias=True, rope_theta=1_000_000.0,
+            ),
+            num_micro=4,
+        )
+    if arch_id == "qwen2-72b":
+        # 80L d=8192 64H GQA kv=8 d_ff=29568 vocab=152064, QKV bias
+        return LMArch(
+            arch_id,
+            TransformerConfig(
+                name=arch_id, n_layers=80, d_model=8192, n_heads=64,
+                n_kv_heads=8, head_dim=128, d_ff=29568, vocab=152064,
+                qkv_bias=True, rope_theta=1_000_000.0,
+            ),
+            num_micro=16,
+            remat_group=5,  # sqrt-L remat: 16 groups x 5 layers
+        )
+    if arch_id == "smollm-360m":
+        # 32L d=960 15H GQA kv=5 d_ff=2560 vocab=49152 (llama-arch small,
+        # tied embeddings)
+        return LMArch(
+            arch_id,
+            TransformerConfig(
+                name=arch_id, n_layers=32, d_model=960, n_heads=15,
+                n_kv_heads=5, head_dim=64, d_ff=2560, vocab=49152,
+                tie_embeddings=True, rope_theta=10_000.0,
+            ),
+            num_micro=1,
+            tp=False,  # 15 heads don't divide any TP width; FSDP-only
+        )
+    if arch_id == "deepseek-moe-16b":
+        # 28L d=2048 16H (kv=16) expert d_ff=1408 vocab=102400,
+        # 2 shared + 64 routed top-6, first layer dense (dense d_ff=10944)
+        return LMArch(
+            arch_id,
+            TransformerConfig(
+                name=arch_id, n_layers=28, d_model=2048, n_heads=16,
+                n_kv_heads=16, head_dim=128, d_ff=10944, vocab=102400,
+                rope_theta=10_000.0,
+                moe=MoEConfig(
+                    num_experts=64, top_k=6, d_ff_expert=1408, n_shared=2,
+                    first_k_dense=1, capacity_factor=1.25,
+                ),
+            ),
+            num_micro=4,
+        )
+    if arch_id == "deepseek-v2-lite-16b":
+        # 27L d=2048 16H MLA kv_lora=512 rope_dim=64, expert d_ff=1408
+        # vocab=102400, 2 shared + 64 routed top-6, first layer dense.
+        # (The assignment sheet says both "64e top-6" and "160 routed"; the
+        # HF/paper V2-Lite config is 64 routed + 2 shared — we follow it and
+        # note the discrepancy here.)
+        return LMArch(
+            arch_id,
+            TransformerConfig(
+                name=arch_id, n_layers=27, d_model=2048, n_heads=16,
+                n_kv_heads=16, head_dim=128, d_ff=10944, vocab=102400,
+                attention="mla", mla_kv_lora_rank=512,
+                mla_qk_nope_head_dim=128, mla_qk_rope_head_dim=64,
+                mla_v_head_dim=128, rope_theta=10_000.0,
+                moe=MoEConfig(
+                    num_experts=64, top_k=6, d_ff_expert=1408, n_shared=2,
+                    first_k_dense=1, capacity_factor=1.25,
+                ),
+            ),
+            num_micro=4,
+        )
+    if arch_id == "dimenet":
+        return GNNArch(
+            arch_id,
+            DimeNetConfig(
+                name=arch_id, n_blocks=6, d_hidden=128, n_bilinear=8,
+                n_spherical=7, n_radial=6,
+            ),
+        )
+    if arch_id == "autoint":
+        return RecsysArch(
+            arch_id,
+            AutoIntConfig(
+                name=arch_id, n_sparse=39, embed_dim=16, n_attn_layers=3,
+                n_heads=2, d_attn=32, vocab_sizes=CRITEO39_VOCABS,
+            ),
+        )
+    if arch_id == "din":
+        return RecsysArch(
+            arch_id,
+            DINConfig(
+                name=arch_id, embed_dim=18, seq_len=100, attn_mlp=(80, 40),
+                mlp=(200, 80), n_items=10_000_000, n_context=8,
+                context_vocab=100_000,
+            ),
+            embed_dim_retrieval=18,
+        )
+    if arch_id == "sasrec":
+        return RecsysArch(
+            arch_id,
+            SASRecConfig(
+                name=arch_id, embed_dim=50, n_blocks=2, n_heads=1,
+                seq_len=50, n_items=10_000_000,
+            ),
+            embed_dim_retrieval=50,
+        )
+    if arch_id == "xdeepfm":
+        return RecsysArch(
+            arch_id,
+            XDeepFMConfig(
+                name=arch_id, n_sparse=39, embed_dim=10,
+                cin_layers=(200, 200, 200), mlp=(400, 400),
+                vocab_sizes=CRITEO39_VOCABS,
+            ),
+        )
+    raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")

@@ -1,0 +1,44 @@
+"""LANNS core — the paper's primary contribution.
+
+Two-level partitioning (hash sharding + learned segmentation) over
+per-partition ANN engines (HNSW or dense Pallas scan), with spill routing,
+perShardTopK-trimmed two-level merging, and exact brute-force ground truth.
+"""
+
+from repro.core.brute_force import brute_force_topk
+from repro.core.hnsw import HNSWConfig, HNSWIndex, FrozenHNSW
+from repro.core.lanns import LannsConfig, LannsIndex
+from repro.core.merge import merge_topk, merge_topk_np, per_shard_topk, two_level_merge_np
+from repro.core.recall import recall_at_k, recall_table
+from repro.core.segmenter import (
+    SegmenterConfig,
+    RandomSegmenter,
+    TreeSegmenter,
+    expected_spill_fraction,
+    failure_probability,
+    make_segmenter,
+)
+from repro.core.sharding import TwoLevelPartitioner, hash_shard
+
+__all__ = [
+    "HNSWConfig",
+    "HNSWIndex",
+    "FrozenHNSW",
+    "LannsConfig",
+    "LannsIndex",
+    "SegmenterConfig",
+    "RandomSegmenter",
+    "TreeSegmenter",
+    "TwoLevelPartitioner",
+    "brute_force_topk",
+    "expected_spill_fraction",
+    "failure_probability",
+    "hash_shard",
+    "make_segmenter",
+    "merge_topk",
+    "merge_topk_np",
+    "per_shard_topk",
+    "recall_at_k",
+    "recall_table",
+    "two_level_merge_np",
+]

@@ -1,0 +1,56 @@
+"""Distributed brute-force search (paper §5.4) — exact ground truth at scale.
+
+The paper partitions the dataset over executors, computes partial results for
+the whole query set against each partition, and merges by queryId.  Here each
+"executor" is a corpus block (offline, host loop for low memory) or a mesh
+shard (the distributed path in serve/retrieval.py); the partial top-k merge is
+``merge_topk``.  The scoring inner loop is the same fused distance+top-k
+kernel as serving, so ground-truth generation exercises the production path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.merge import merge_topk_np
+from repro.kernels import ops
+
+
+def brute_force_topk(
+    queries: np.ndarray,
+    corpus: np.ndarray,
+    k: int,
+    metric: str = "l2",
+    *,
+    num_partitions: int = 1,
+    query_block: int = 4096,
+    backend: str = "auto",
+):
+    """Exact top-k via partitioned scan + two-level merge.
+
+    queries (B, d), corpus (N, d) -> (dists (B, k), ids (B, k)).  ids index
+    ``corpus`` rows.  num_partitions > 1 exercises the partial-result merge
+    exactly as the Spark implementation does (each partition produces its own
+    top-k, then results are merged by query id).
+    """
+    queries = np.asarray(queries, dtype=np.float32)
+    corpus = np.asarray(corpus, dtype=np.float32)
+    B, _ = queries.shape
+    N = corpus.shape[0]
+    bounds = np.linspace(0, N, num_partitions + 1).astype(np.int64)
+    part_d = np.full((B, num_partitions, k), np.inf, dtype=np.float32)
+    part_i = np.full((B, num_partitions, k), -1, dtype=np.int64)
+    for p in range(num_partitions):
+        lo, hi = int(bounds[p]), int(bounds[p + 1])
+        if hi <= lo:
+            continue
+        kk = min(k, hi - lo)
+        for qs in range(0, B, query_block):
+            qe = min(qs + query_block, B)
+            d, i = ops.distance_topk(
+                queries[qs:qe], corpus[lo:hi], kk, metric, backend=backend
+            )
+            d, i = np.asarray(d), np.asarray(i, dtype=np.int64)
+            part_d[qs:qe, p, :kk] = d
+            part_i[qs:qe, p, :kk] = np.where(i >= 0, i + lo, -1)
+    return merge_topk_np(part_d.reshape(B, -1), part_i.reshape(B, -1), k)

@@ -1,0 +1,502 @@
+"""Hierarchical Navigable Small World (HNSW) index — array form.
+
+LANNS (§3) uses HNSW [Malkov & Yashunin 2016] as the per-partition ANN engine.
+This module implements HNSW faithfully in two halves that mirror the paper's
+offline/online split:
+
+* **Build** (offline — the paper builds inside Spark executors): a numpy
+  implementation of Algorithms 1–4 of the HNSW paper (insert with greedy
+  descent, ef_construction beam at each level, and the neighbor-selection
+  heuristic).  Build is inherently sequential per index; LANNS gets its build
+  parallelism *across* partitions (one HNSW per (shard, segment)), which is
+  exactly what ``repro.core.lanns`` does.
+
+* **Search** (online — the serving hot path): the frozen index is a set of
+  fixed-shape int32 adjacency arrays, and search is a jit/vmap-compatible
+  beam search written with ``jax.lax`` control flow so it runs under
+  ``shard_map`` on a TPU mesh.  This is the TPU adaptation described in
+  DESIGN.md §2: instead of pointer-chasing over a heap-allocated graph, we
+  keep a top-``ef`` beam as dense (ids, dists, expanded) arrays and expand the
+  best unexpanded node each iteration with a batched gather + MXU-friendly
+  distance block.
+
+Frozen layout
+-------------
+``vectors``      (n, d)  float32   — corpus (cosine-normalized if metric=cos)
+``adj0``         (n, 2M) int32     — level-0 adjacency, -1 padded
+``level_nodes``  list[(n_l,)]      — global ids present at level l >= 1
+``level_adj``    list[(n_l, M)]    — adjacency at level l >= 1 (global ids)
+``level_loc``    list[(n,)]        — global id -> local row at level l (-1 absent)
+``entry``        int               — entry point (top-level node)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_INF = np.float32(np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class HNSWConfig:
+    """Build/search parameters (HNSW paper notation).
+
+    M:                max out-degree at levels >= 1 (level 0 uses 2M).
+    ef_construction:  beam width during insertion.
+    ef_search:        default beam width during search (>= k).
+    metric:           'l2' (squared euclidean), 'ip' (inner product, maximize),
+                      'cos' (cosine; vectors are L2-normalized at build/query).
+    extend_candidates / keep_pruned: Algorithm 4 switches.
+    """
+
+    M: int = 16
+    ef_construction: int = 100
+    ef_search: int = 100
+    metric: str = "l2"
+    seed: int = 0
+    extend_candidates: bool = False
+    keep_pruned: bool = True
+    max_level_cap: int = 12
+
+    @property
+    def m_l(self) -> float:
+        return 1.0 / math.log(self.M)
+
+    @property
+    def m_max0(self) -> int:
+        return 2 * self.M
+
+
+def _normalize_rows(x: np.ndarray) -> np.ndarray:
+    n = np.linalg.norm(x, axis=-1, keepdims=True)
+    return x / np.maximum(n, 1e-12)
+
+
+def pairwise_dist(metric: str, q: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Distance from one query vector to rows of x.  Lower is better."""
+    if metric == "l2":
+        diff = x - q
+        return np.einsum("nd,nd->n", diff, diff)
+    # ip / cos: score = -<q, x> so "lower is better" stays uniform.
+    return -(x @ q)
+
+
+class HNSWIndex:
+    """A single HNSW graph over one data partition."""
+
+    def __init__(self, config: HNSWConfig, dim: int):
+        self.config = config
+        self.dim = dim
+        self._vecs: list[np.ndarray] = []
+        self._levels: list[int] = []
+        # adjacency as python lists during build; frozen to arrays afterwards.
+        self._adj: list[list[list[int]]] = []  # [level][node] -> [nbr ids]
+        self.entry: int = -1
+        self.max_level: int = -1
+        self._rng = np.random.default_rng(config.seed)
+        self._frozen = None
+        self._vstack: Optional[np.ndarray] = None
+        self._visited = np.zeros(0, dtype=np.int64)
+        self._visit_gen = 0
+        self.keys: Optional[np.ndarray] = None  # original (global) keys
+
+    # ------------------------------------------------------------------
+    # Build (numpy, Algorithms 1-4 of the HNSW paper)
+    # ------------------------------------------------------------------
+
+    @property
+    def size(self) -> int:
+        return len(self._vecs)
+
+    def _dist(self, q: np.ndarray, ids) -> np.ndarray:
+        ids = np.asarray(ids)
+        vecs = self._vstack[ids]
+        if self.config.metric == "l2":
+            # true squared L2 via precomputed row norms (build hot path)
+            return self._norms[ids] - 2.0 * (vecs @ q) + q @ q
+        return -(vecs @ q)
+
+    def _draw_level(self) -> int:
+        u = self._rng.random()
+        lvl = int(-math.log(max(u, 1e-12)) * self.config.m_l)
+        return min(lvl, self.config.max_level_cap)
+
+    def _search_layer(self, q, entry_points, ef, level):
+        """Algorithm 2 — beam search at one level.  Returns (dists, ids) sorted."""
+        cfg = self.config
+        visited = self._visited
+        self._visit_gen += 1
+        gen = self._visit_gen
+        adj = self._adj[level]
+
+        eps = list(dict.fromkeys(entry_points))
+        d0 = self._dist(q, eps)
+        cand: list[tuple[float, int]] = []  # min-heap by dist
+        best: list[tuple[float, int]] = []  # max-heap by -dist (the W set)
+        for d, e in zip(d0, eps):
+            visited[e] = gen
+            heapq.heappush(cand, (float(d), e))
+            heapq.heappush(best, (-float(d), e))
+        while len(best) > ef:
+            heapq.heappop(best)
+
+        while cand:
+            d_c, c = heapq.heappop(cand)
+            d_worst = -best[0][0]
+            if d_c > d_worst and len(best) >= ef:
+                break
+            nbrs = [u for u in adj[c] if visited[u] != gen]
+            if not nbrs:
+                continue
+            for u in nbrs:
+                visited[u] = gen
+            dn = self._dist(q, nbrs)
+            for d, u in zip(dn, nbrs):
+                d = float(d)
+                if len(best) < ef or d < -best[0][0]:
+                    heapq.heappush(cand, (d, u))
+                    heapq.heappush(best, (-d, u))
+                    if len(best) > ef:
+                        heapq.heappop(best)
+        out = sorted((-nd, i) for nd, i in best)
+        return [d for d, _ in out], [i for _, i in out]
+
+    def _select_neighbors(self, q, cand_dists, cand_ids, m):
+        """Algorithm 4 — heuristic neighbor selection with distance diversity.
+
+        Vectorized: one (c, c) candidate-candidate distance matrix up front,
+        then a cheap greedy pass using row slices of it (the per-candidate
+        re-stacking this replaces dominated the build profile).
+        """
+        cfg = self.config
+        cand_ids = np.asarray(cand_ids)
+        cand_dists = np.asarray(cand_dists)
+        order = np.argsort(cand_dists, kind="stable")
+        ids = cand_ids[order]
+        dists = cand_dists[order]
+        c = len(ids)
+        if c <= 1:
+            return list(ids[:m])
+        V = self._vstack[ids]  # (c, d)
+        if cfg.metric == "l2":
+            norms = np.einsum("cd,cd->c", V, V)
+            D = norms[:, None] - 2.0 * (V @ V.T) + norms[None, :]
+        else:
+            D = -(V @ V.T)
+        selected: list[int] = []  # positions into `ids`
+        pruned: list[int] = []
+        for i in range(c):
+            if len(selected) >= m:
+                break
+            if not selected or dists[i] < D[i, selected].min():
+                selected.append(i)
+            elif cfg.keep_pruned:
+                pruned.append(i)
+        if cfg.keep_pruned and len(selected) < m:
+            selected.extend(pruned[: m - len(selected)])
+        return [int(ids[i]) for i in selected]
+
+    def add_batch(self, vectors: np.ndarray, keys: Optional[np.ndarray] = None):
+        """Insert vectors sequentially (HNSW build is order-dependent)."""
+        cfg = self.config
+        vectors = np.asarray(vectors, dtype=np.float32)
+        if cfg.metric == "cos":
+            vectors = _normalize_rows(vectors)
+        n_new = vectors.shape[0]
+        n_total = self.size + n_new
+        self._visited = np.zeros(n_total, dtype=np.int64)
+        self._visit_gen = 0
+        # keep a contiguous copy for vectorized gathers during build
+        if self.size:
+            self._vstack = np.concatenate([np.stack(self._vecs), vectors])
+        else:
+            self._vstack = vectors
+        self._norms = np.einsum("nd,nd->n", self._vstack, self._vstack)
+
+        for r in range(n_new):
+            x = vectors[r]
+            i = self.size
+            self._vecs.append(x)
+            lvl = self._draw_level()
+            self._levels.append(lvl)
+            while len(self._adj) <= lvl:
+                self._adj.append({})  # type: ignore[arg-type]
+            # adjacency stored as dict level -> {node: list}; normalize lazily
+            for l in range(lvl + 1):
+                if isinstance(self._adj[l], dict):
+                    self._adj[l][i] = []
+
+            if self.entry < 0:
+                self.entry = i
+                self.max_level = lvl
+                continue
+
+            ep = [self.entry]
+            # Phase 1: greedy descent through levels above lvl
+            for l in range(self.max_level, lvl, -1):
+                _, ids = self._search_layer(x, ep, 1, l)
+                ep = ids[:1]
+            # Phase 2: connect at each level from min(max_level, lvl) .. 0
+            for l in range(min(self.max_level, lvl), -1, -1):
+                m_max = cfg.m_max0 if l == 0 else cfg.M
+                dists, ids = self._search_layer(x, ep, cfg.ef_construction, l)
+                cand_ids, cand_d = ids, dists
+                if cfg.extend_candidates:
+                    ext = {u for c in ids for u in self._adj[l][c]}
+                    ext -= set(ids)
+                    if ext:
+                        ext = list(ext)
+                        cand_ids = ids + ext
+                        cand_d = dists + list(self._dist(x, ext))
+                sel = self._select_neighbors(x, cand_d, cand_ids, cfg.M)
+                self._adj[l][i] = list(sel)
+                for s in sel:
+                    self._adj[l][s].append(i)
+                    self._prune_node_dict(s, l, m_max)
+                ep = ids
+            if lvl > self.max_level:
+                self.max_level = lvl
+                self.entry = i
+        if keys is not None:
+            keys = np.asarray(keys)
+            self.keys = keys if self.keys is None else np.concatenate([self.keys, keys])
+        self._frozen = None
+        return self
+
+    def _prune_node_dict(self, node, level, m_max):
+        adj = self._adj[level][node]
+        if len(adj) <= m_max:
+            return
+        q = self._vecs[node]
+        d = self._dist(q, adj)
+        self._adj[level][node] = self._select_neighbors(q, list(d), list(adj), m_max)
+
+    # ------------------------------------------------------------------
+    # Freeze to arrays
+    # ------------------------------------------------------------------
+
+    def freeze(self) -> "FrozenHNSW":
+        if self._frozen is not None:
+            return self._frozen
+        cfg = self.config
+        n = self.size
+        vecs = np.stack(self._vecs).astype(np.float32)
+        levels = np.asarray(self._levels, dtype=np.int32)
+        adj0 = np.full((n, cfg.m_max0), -1, dtype=np.int32)
+        for i, nbrs in self._adj[0].items():
+            k = min(len(nbrs), cfg.m_max0)
+            adj0[i, :k] = nbrs[:k]
+        level_nodes, level_adj, level_loc = [], [], []
+        for l in range(1, len(self._adj)):
+            ids = np.asarray(sorted(self._adj[l].keys()), dtype=np.int32)
+            a = np.full((len(ids), cfg.M), -1, dtype=np.int32)
+            loc = np.full(n, -1, dtype=np.int32)
+            for r, i in enumerate(ids):
+                nbrs = self._adj[l][i][: cfg.M]
+                a[r, : len(nbrs)] = nbrs
+                loc[i] = r
+            level_nodes.append(ids)
+            level_adj.append(a)
+            level_loc.append(loc)
+        self._frozen = FrozenHNSW(
+            config=cfg,
+            vectors=vecs,
+            levels=levels,
+            adj0=adj0,
+            level_nodes=level_nodes,
+            level_adj=level_adj,
+            level_loc=level_loc,
+            entry=self.entry,
+            keys=self.keys,
+        )
+        return self._frozen
+
+    # convenience: numpy reference search (exact same algorithm as build beam)
+    def search_np(self, queries: np.ndarray, k: int, ef: Optional[int] = None):
+        cfg = self.config
+        ef = max(ef or cfg.ef_search, k)
+        queries = np.asarray(queries, dtype=np.float32)
+        if cfg.metric == "cos":
+            queries = _normalize_rows(queries)
+        self._visited = np.zeros(self.size, dtype=np.int64)
+        self._visit_gen = 0
+        self._vstack = np.stack(self._vecs)
+        self._norms = np.einsum("nd,nd->n", self._vstack, self._vstack)
+        out_d = np.full((len(queries), k), _INF, dtype=np.float32)
+        out_i = np.full((len(queries), k), -1, dtype=np.int64)
+        for qi, q in enumerate(queries):
+            ep = [self.entry]
+            for l in range(self.max_level, 0, -1):
+                _, ids = self._search_layer(q, ep, 1, l)
+                ep = ids[:1]
+            dists, ids = self._search_layer(q, ep, ef, 0)
+            m = min(k, len(ids))
+            out_d[qi, :m] = dists[:m]
+            out_i[qi, :m] = ids[:m]
+        if self.keys is not None:
+            valid = out_i >= 0
+            out_i = np.where(valid, self.keys[np.clip(out_i, 0, None)], -1)
+        return out_d, out_i
+
+
+@dataclasses.dataclass
+class FrozenHNSW:
+    """Immutable array-form HNSW, ready for jit search / serialization."""
+
+    config: HNSWConfig
+    vectors: np.ndarray
+    levels: np.ndarray
+    adj0: np.ndarray
+    level_nodes: list
+    level_adj: list
+    level_loc: list
+    entry: int
+    keys: Optional[np.ndarray] = None
+
+    @property
+    def size(self) -> int:
+        return self.vectors.shape[0]
+
+    def device_arrays(self):
+        """The pytree consumed by ``beam_search`` (device-resident state)."""
+        return {
+            "vectors": jnp.asarray(self.vectors),
+            "adj0": jnp.asarray(self.adj0),
+            "level_adj": [jnp.asarray(a) for a in self.level_adj],
+            "level_loc": [jnp.asarray(l) for l in self.level_loc],
+            "entry": jnp.asarray(self.entry, dtype=jnp.int32),
+        }
+
+    def search(self, queries, k: int, ef: Optional[int] = None, max_iters: int = 0):
+        """Batched jit beam search. Returns (dists (B,k), ids (B,k))."""
+        cfg = self.config
+        ef = max(ef or cfg.ef_search, k)
+        if max_iters <= 0:
+            max_iters = ef + 2 * cfg.M
+        q = jnp.asarray(queries, dtype=jnp.float32)
+        if cfg.metric == "cos":
+            q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        arrs = self.device_arrays()
+        d, i = beam_search(
+            arrs,
+            q,
+            k=k,
+            ef=ef,
+            max_iters=max_iters,
+            metric="l2" if cfg.metric == "l2" else "ip",
+            num_upper_levels=len(self.level_adj),
+        )
+        d, i = np.asarray(d), np.asarray(i)
+        if self.keys is not None:
+            valid = i >= 0
+            i = np.where(valid, self.keys[np.clip(i, 0, None)], -1)
+        return d, i
+
+
+# ---------------------------------------------------------------------------
+# JAX search (serving hot path)
+# ---------------------------------------------------------------------------
+
+
+def _distance_rows(metric, q, x):
+    """q (d,), x (m, d) -> (m,). Lower is better."""
+    if metric == "l2":
+        # ||q-x||^2 = ||x||^2 - 2<q,x> + ||q||^2 ; the ||q||^2 term is a
+        # per-query constant and irrelevant for ranking but we keep it so the
+        # returned distances are true squared distances (tests rely on it).
+        return jnp.sum((x - q[None, :]) ** 2, axis=-1)
+    return -(x @ q)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "ef", "max_iters", "metric", "num_upper_levels"),
+)
+def beam_search(arrs, queries, *, k, ef, max_iters, metric, num_upper_levels):
+    """Batched HNSW search over frozen arrays.
+
+    Upper levels: greedy descent (while_loop).  Level 0: best-first beam of
+    width ``ef`` kept as dense arrays; each iteration expands the best
+    unexpanded entry.  All ops are fixed-shape so the whole thing jits and
+    shard_maps.  Expanded-set semantics: a node evicted from the beam may be
+    re-inserted and re-expanded later; this wastes a little compute but never
+    hurts correctness (matches the `visited`-free formulations of array HNSW).
+    """
+    vectors = arrs["vectors"]
+    adj0 = arrs["adj0"]
+    entry = arrs["entry"]
+
+    def one_query(q):
+        # ---- upper levels: greedy walk to a local minimum per level
+        ep = entry
+        ep_d = _distance_rows(metric, q, vectors[ep[None]])[0]
+        for l in range(num_upper_levels - 1, -1, -1):
+            adj = arrs["level_adj"][l]
+            loc = arrs["level_loc"][l]
+
+            def body(state):
+                ep, ep_d, _ = state
+                row = loc[ep]
+                nbrs = adj[row]
+                valid = nbrs >= 0
+                nd = _distance_rows(metric, q, vectors[jnp.clip(nbrs, 0)])
+                nd = jnp.where(valid, nd, jnp.inf)
+                j = jnp.argmin(nd)
+                better = nd[j] < ep_d
+                return (
+                    jnp.where(better, nbrs[j], ep),
+                    jnp.where(better, nd[j], ep_d),
+                    better,
+                )
+
+            def cond(state):
+                return state[2]
+
+            ep, ep_d, _ = jax.lax.while_loop(cond, body, (ep, ep_d, jnp.bool_(True)))
+
+        # ---- level 0 beam
+        m0 = adj0.shape[1]
+        beam_ids = jnp.full((ef,), -1, dtype=jnp.int32).at[0].set(ep)
+        beam_d = jnp.full((ef,), jnp.inf, dtype=jnp.float32).at[0].set(ep_d)
+        beam_exp = jnp.zeros((ef,), dtype=jnp.bool_)
+
+        def cond(state):
+            beam_ids, beam_d, beam_exp, it = state
+            frontier = (~beam_exp) & (beam_ids >= 0)
+            return jnp.any(frontier) & (it < max_iters)
+
+        def body(state):
+            beam_ids, beam_d, beam_exp, it = state
+            pick_d = jnp.where((~beam_exp) & (beam_ids >= 0), beam_d, jnp.inf)
+            b = jnp.argmin(pick_d)
+            beam_exp = beam_exp.at[b].set(True)
+            node = beam_ids[b]
+            nbrs = adj0[jnp.clip(node, 0)]
+            valid = nbrs >= 0
+            # dedup against current beam (m0 x ef comparison matrix)
+            dup = jnp.any(nbrs[:, None] == beam_ids[None, :], axis=1)
+            valid = valid & (~dup)
+            nd = _distance_rows(metric, q, vectors[jnp.clip(nbrs, 0)])
+            nd = jnp.where(valid, nd, jnp.inf)
+            # merge (ef + m0) candidates, keep best ef
+            all_ids = jnp.concatenate([beam_ids, jnp.where(valid, nbrs, -1)])
+            all_d = jnp.concatenate([beam_d, nd])
+            all_exp = jnp.concatenate([beam_exp, jnp.zeros((m0,), jnp.bool_)])
+            neg_top, idx = jax.lax.top_k(-all_d, ef)
+            return all_ids[idx], -neg_top, all_exp[idx], it + 1
+
+        beam_ids, beam_d, beam_exp, _ = jax.lax.while_loop(
+            cond, body, (beam_ids, beam_d, beam_exp, jnp.int32(0))
+        )
+        neg_top, idx = jax.lax.top_k(-beam_d, k)
+        return -neg_top, beam_ids[idx]
+
+    return jax.vmap(one_query)(queries)

@@ -1,0 +1,416 @@
+"""LannsIndex — the end-to-end LANNS platform object (paper §5).
+
+Composes the pieces exactly as the paper's offline framework does:
+
+  1. ``fit``: learn ONE segmenter on a uniform subsample (§5.1) — shared by
+     every shard, stored once.
+  2. ``build``: two-level partition (hash shard → segment), then build an
+     independent per-(shard, segment) engine **in parallel** (§5.2).  Engines:
+     'hnsw' (the paper's choice) or 'scan' (TPU-native dense Pallas scan —
+     DESIGN.md §2).  Builds are resumable: each partition artifact is written
+     atomically with a manifest, so a preempted build restarts where it died
+     (the paper's HDFS-temp-path fault-tolerance story, §5.3.1).
+  3. ``query``: route queries (virtual spill), search only routed segments,
+     segment-merge inside the shard, shard-merge at the broker with
+     perShardTopK trimming (§5.3.2).
+
+The distributed on-mesh serving path lives in repro/serve/retrieval.py; this
+module is the offline/reference implementation that the paper benchmarks in
+Tables 1-7 and that our benchmark harness mirrors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from concurrent.futures import ProcessPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from repro.common.utils import Timer
+from repro.core.hnsw import HNSWConfig, HNSWIndex
+from repro.core.merge import merge_topk_np, per_shard_topk
+from repro.core.segmenter import SegmenterConfig
+from repro.core.sharding import TwoLevelPartitioner
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class LannsConfig:
+    """(n, m)-partitioning in the paper's notation: n shards x m segments.
+
+    metric: 'l2' | 'ip' | 'cos' | 'mips'.  'mips' (beyond-paper) applies the
+    augmented-vector reduction [Bachrach et al., RecSys'14]: corpus rows get
+    an extra coordinate sqrt(M^2 - |x|^2) (queries get 0), turning max-inner-
+    product into L2 NN — which is what hyperplane segmenters route well
+    (raw-IP routing loses the norm component entirely).  Returned distances
+    are converted back to inner products (negated, lower-is-better).
+    """
+
+    num_shards: int = 1
+    num_segments: int = 8
+    segmenter: str = "rh"  # 'rs' | 'rh' | 'apd'
+    alpha: float = 0.15
+    spill: str = "virtual"  # 'virtual' | 'physical'
+    metric: str = "l2"
+    engine: str = "hnsw"  # 'hnsw' | 'scan'
+    hnsw_m: int = 16
+    ef_construction: int = 100
+    ef_search: int = 100
+    topk_confidence: float = 0.95
+    seed: int = 0
+    segmenter_sample: int = 250_000
+
+    def segmenter_config(self) -> SegmenterConfig:
+        return SegmenterConfig(
+            kind=self.segmenter,
+            num_segments=self.num_segments,
+            alpha=self.alpha,
+            spill=self.spill,
+            seed=self.seed,
+            sample_size=self.segmenter_sample,
+        )
+
+    def hnsw_config(self) -> HNSWConfig:
+        return HNSWConfig(
+            M=self.hnsw_m,
+            ef_construction=self.ef_construction,
+            ef_search=self.ef_search,
+            metric="l2" if self.metric == "mips" else self.metric,
+            seed=self.seed,
+        )
+
+
+def _build_one_partition(args):
+    """Worker: build one (shard, segment) engine.  Top-level for pickling."""
+    (s, g, vectors, keys, engine, hnsw_cfg) = args
+    t0 = time.perf_counter()
+    if engine == "hnsw" and len(vectors) > 0:
+        idx = HNSWIndex(hnsw_cfg, vectors.shape[1])
+        idx.add_batch(vectors, keys)
+        frozen = idx.freeze()
+        payload = {
+            "kind": "hnsw",
+            "vectors": frozen.vectors,
+            "levels": frozen.levels,
+            "adj0": frozen.adj0,
+            "entry": frozen.entry,
+            "keys": frozen.keys,
+            "level_nodes": frozen.level_nodes,
+            "level_adj": frozen.level_adj,
+            "level_loc": frozen.level_loc,
+        }
+    else:
+        payload = {"kind": "scan", "vectors": vectors, "keys": keys}
+    return s, g, payload, time.perf_counter() - t0
+
+
+class _Partition:
+    """A built (shard, segment) engine."""
+
+    def __init__(self, payload, config: LannsConfig):
+        self.kind = payload["kind"]
+        self.config = config
+        self.keys = payload.get("keys")
+        self.vectors = payload["vectors"]
+        if self.kind == "hnsw":
+            from repro.core.hnsw import FrozenHNSW
+
+            self.frozen = FrozenHNSW(
+                config=config.hnsw_config(),
+                vectors=payload["vectors"],
+                levels=payload["levels"],
+                adj0=payload["adj0"],
+                level_nodes=payload["level_nodes"],
+                level_adj=payload["level_adj"],
+                level_loc=payload["level_loc"],
+                entry=int(payload["entry"]),
+                keys=payload.get("keys"),
+            )
+
+    @property
+    def size(self):
+        return 0 if self.vectors is None else len(self.vectors)
+
+    def search(self, queries: np.ndarray, k: int, ef: Optional[int] = None):
+        if self.size == 0:
+            B = queries.shape[0]
+            return (
+                np.full((B, k), np.inf, np.float32),
+                np.full((B, k), -1, np.int64),
+            )
+        k_eff = min(k, self.size)
+        if self.kind == "hnsw":
+            d, i = self.frozen.search(queries, k_eff, ef=ef)
+        else:
+            metric = (
+                "l2" if self.config.metric == "mips" else self.config.metric
+            )
+            d, i = ops.distance_topk_np(queries, self.vectors, k_eff, metric)
+            i = i.astype(np.int64)
+            if self.keys is not None:
+                i = np.where(i >= 0, self.keys[np.clip(i, 0, None)], -1)
+        if k_eff < k:
+            pad_d = np.full((queries.shape[0], k - k_eff), np.inf, np.float32)
+            pad_i = np.full((queries.shape[0], k - k_eff), -1, np.int64)
+            d = np.concatenate([d, pad_d], axis=1)
+            i = np.concatenate([i.astype(np.int64), pad_i], axis=1)
+        return d, i.astype(np.int64)
+
+
+class LannsIndex:
+    """End-to-end LANNS index: fit -> build -> query (+ save/load/resume)."""
+
+    def __init__(self, config: LannsConfig):
+        self.config = config
+        self.partitioner = TwoLevelPartitioner(
+            config.num_shards, config.segmenter_config()
+        )
+        self.partitions: dict[tuple, _Partition] = {}
+        self.build_stats: dict = {}
+
+    # -- build ---------------------------------------------------------------
+
+    def fit(self, data: np.ndarray) -> "LannsIndex":
+        with Timer() as t:
+            self.partitioner.fit(data)
+        self.build_stats["segmenter_fit_seconds"] = t.seconds
+        return self
+
+    def build(
+        self,
+        data: np.ndarray,
+        keys: Optional[np.ndarray] = None,
+        *,
+        workers: int = 0,
+        resume_dir: Optional[str] = None,
+    ) -> "LannsIndex":
+        """Partition + parallel per-partition index build.
+
+        workers=0 builds in-process (deterministic single-thread); workers>0
+        uses a process pool — one "executor" per partition, the paper's Spark
+        model.  resume_dir enables checkpointed builds: finished partitions
+        are persisted and skipped on restart.
+        """
+        cfg = self.config
+        data = np.asarray(data, dtype=np.float32)
+        if cfg.metric == "mips":
+            # augmented-vector MIPS->L2 reduction; see LannsConfig docstring
+            norms2 = np.einsum("nd,nd->n", data, data)
+            self._mips_M2 = float(norms2.max())
+            aug = np.sqrt(np.maximum(self._mips_M2 - norms2, 0.0))
+            data = np.concatenate([data, aug[:, None]], axis=1)
+        n = data.shape[0]
+        if keys is None:
+            keys = np.arange(n, dtype=np.int64)
+        if not self.partitioner._fitted:
+            self.fit(data)
+        with Timer() as t_assign:
+            assignment = self.partitioner.assign(data, keys)
+        jobs = []
+        per_partition_seconds = {}
+        for s in range(cfg.num_shards):
+            for g in range(cfg.num_segments):
+                rows = assignment.rows[s][g]
+                if resume_dir and self._partition_done(resume_dir, s, g):
+                    self.partitions[(s, g)] = self._load_partition(resume_dir, s, g)
+                    continue
+                jobs.append(
+                    (s, g, data[rows], keys[rows], cfg.engine, cfg.hnsw_config())
+                )
+        with Timer() as t_build:
+            if workers and len(jobs) > 1:
+                with ProcessPoolExecutor(max_workers=workers) as ex:
+                    results = list(ex.map(_build_one_partition, jobs))
+            else:
+                results = [_build_one_partition(j) for j in jobs]
+        for s, g, payload, secs in results:
+            self.partitions[(s, g)] = _Partition(payload, cfg)
+            per_partition_seconds[f"{s}/{g}"] = secs
+            if resume_dir:
+                self._save_partition(resume_dir, s, g, payload)
+        self.build_stats.update(
+            assign_seconds=t_assign.seconds,
+            build_wall_seconds=t_build.seconds,
+            per_partition_seconds=per_partition_seconds,
+            partition_sizes=assignment.partition_sizes().tolist(),
+            total_stored=assignment.total_stored,
+            n_input=n,
+            duplication_factor=assignment.total_stored / max(n, 1),
+        )
+        return self
+
+    # -- query ---------------------------------------------------------------
+
+    def query(
+        self,
+        queries: np.ndarray,
+        topk: int,
+        *,
+        ef: Optional[int] = None,
+        return_stats: bool = False,
+    ):
+        """Two-level partitioned search with perShardTopK (paper §5.3).
+
+        Every query goes to every shard; within a shard it goes only to the
+        segments its virtual-spill routing selects.  Returns (dists, ids)
+        shaped (B, topk); optionally per-query routing stats.
+        """
+        cfg = self.config
+        queries = np.asarray(queries, dtype=np.float32)
+        if cfg.metric == "mips":
+            queries = np.concatenate(
+                [queries, np.zeros((queries.shape[0], 1), np.float32)], axis=1
+            )
+        B = queries.shape[0]
+        seg_mask = self.partitioner.route_queries(queries)  # (B, m)
+        pstk = per_shard_topk(topk, cfg.num_shards, cfg.topk_confidence)
+        shard_d = np.full((B, cfg.num_shards, pstk), np.inf, np.float32)
+        shard_i = np.full((B, cfg.num_shards, pstk), -1, np.int64)
+        segments_visited = seg_mask.sum(axis=1)
+        for s in range(cfg.num_shards):
+            # within-shard: segment search + local (level-1) merge.
+            cand_d = np.full((B, cfg.num_segments, pstk), np.inf, np.float32)
+            cand_i = np.full((B, cfg.num_segments, pstk), -1, np.int64)
+            for g in range(cfg.num_segments):
+                sel = np.nonzero(seg_mask[:, g])[0]
+                if sel.size == 0:
+                    continue
+                part = self.partitions.get((s, g))
+                if part is None or part.size == 0:
+                    continue
+                # the paper propagates the SHARD-level perShardTopK to the
+                # segments (never a per-segment trim) — §5.3.2.
+                d, i = part.search(queries[sel], pstk, ef=ef)
+                cand_d[sel, g] = d
+                cand_i[sel, g] = i
+            shard_d[:, s], shard_i[:, s] = merge_topk_np(
+                cand_d.reshape(B, -1), cand_i.reshape(B, -1), pstk
+            )
+        # level-2: broker merge over shards.
+        out_d, out_i = merge_topk_np(
+            shard_d.reshape(B, -1), shard_i.reshape(B, -1), topk
+        )
+        if cfg.metric == "mips":
+            # convert augmented-L2 distances back to (negated) inner products:
+            # d^2 = M^2 + |q|^2 - 2<q, x>  =>  -<q, x> = (d^2 - M^2 - |q|^2)/2
+            qn = np.einsum("bd,bd->b", queries[:, :-1], queries[:, :-1])
+            out_d = np.where(
+                np.isfinite(out_d),
+                (out_d - self._mips_M2 - qn[:, None]) / 2.0,
+                np.inf,
+            )
+        if return_stats:
+            return out_d, out_i, {
+                "per_shard_topk": pstk,
+                "mean_segments_visited": float(segments_visited.mean()),
+                "max_segments_visited": int(segments_visited.max()),
+            }
+        return out_d, out_i
+
+    # -- persistence (atomic, resumable) --------------------------------------
+
+    @staticmethod
+    def _partition_path(root, s, g):
+        return os.path.join(root, f"shard{s:04d}_seg{g:04d}.npz")
+
+    def _partition_done(self, root, s, g):
+        return os.path.exists(self._partition_path(root, s, g))
+
+    def _save_partition(self, root, s, g, payload):
+        os.makedirs(root, exist_ok=True)
+        path = self._partition_path(root, s, g)
+        arrays = {"kind": np.array(payload["kind"])}
+        for key, val in payload.items():
+            if key == "kind" or val is None:
+                continue
+            if isinstance(val, list):
+                for li, arr in enumerate(val):
+                    arrays[f"{key}__{li}"] = arr
+                arrays[f"{key}__len"] = np.array(len(val))
+            else:
+                arrays[key] = np.asarray(val)
+        fd, tmp = tempfile.mkstemp(dir=root, suffix=".tmp")
+        os.close(fd)
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)  # atomic publish
+
+    def _load_partition(self, root, s, g):
+        with np.load(self._partition_path(root, s, g), allow_pickle=False) as z:
+            payload = {}
+            lists: dict[str, dict[int, np.ndarray]] = {}
+            for key in z.files:
+                if "__" in key:
+                    base, idx = key.rsplit("__", 1)
+                    if idx == "len":
+                        payload.setdefault(base, [None] * int(z[key]))
+                    else:
+                        lists.setdefault(base, {})[int(idx)] = z[key]
+                elif key == "kind":
+                    payload["kind"] = str(z[key])
+                else:
+                    payload[key] = z[key]
+            for base, items in lists.items():
+                payload.setdefault(base, [None] * len(items))
+                for idx, arr in items.items():
+                    payload[base][idx] = arr
+        for key in ("level_nodes", "level_adj", "level_loc"):
+            payload.setdefault(key, [])
+        return _Partition(payload, self.config)
+
+    def save(self, root: str):
+        os.makedirs(root, exist_ok=True)
+        for (s, g), part in self.partitions.items():
+            if not self._partition_done(root, s, g):
+                payload = {"kind": part.kind, "vectors": part.vectors, "keys": part.keys}
+                if part.kind == "hnsw":
+                    fr = part.frozen
+                    payload.update(
+                        levels=fr.levels, adj0=fr.adj0, entry=fr.entry,
+                        level_nodes=fr.level_nodes, level_adj=fr.level_adj,
+                        level_loc=fr.level_loc,
+                    )
+                self._save_partition(root, s, g, payload)
+        seg = self.partitioner.segmenter
+        tree = seg.tree_arrays()
+        manifest = {
+            "config": dataclasses.asdict(self.config),
+            "partitions": sorted([f"{s}/{g}" for s, g in self.partitions]),
+            "build_stats": {
+                k: v for k, v in self.build_stats.items() if k != "per_partition_seconds"
+            },
+        }
+        with open(os.path.join(root, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2, default=str)
+        if tree is not None:
+            np.savez(
+                os.path.join(root, "segmenter.npz"),
+                hyperplanes=tree["hyperplanes"], split=tree["split"],
+                lo=tree["lo"], hi=tree["hi"],
+            )
+
+    @classmethod
+    def load(cls, root: str) -> "LannsIndex":
+        with open(os.path.join(root, "manifest.json")) as f:
+            manifest = json.load(f)
+        config = LannsConfig(**manifest["config"])
+        index = cls(config)
+        seg_path = os.path.join(root, "segmenter.npz")
+        if os.path.exists(seg_path):
+            with np.load(seg_path) as z:
+                seg = index.partitioner.segmenter
+                seg.hyperplanes = z["hyperplanes"]
+                seg.split = z["split"]
+                seg.lo = z["lo"]
+                seg.hi = z["hi"]
+        index.partitioner._fitted = True
+        for pstr in manifest["partitions"]:
+            s, g = (int(v) for v in pstr.split("/"))
+            index.partitions[(s, g)] = index._load_partition(root, s, g)
+        index.build_stats = manifest.get("build_stats", {})
+        return index

@@ -1,0 +1,169 @@
+"""Two-level merging + perShardTopK (paper §5.3).
+
+The merge mirrors production: segment-level results merge *inside* the shard
+(no network), shard-level results merge at the broker (network / collective).
+``per_shard_topk`` implements Eq. (5)-(6): the Normal Approximation Interval
+[Brown, Cai, DasGupta 2001] on the binomial "how many of the global top-k land
+in one of S uniform shards", shrinking what each shard returns from k to
+``min(k, ceil(cI * k))`` — the paper's network-I/O / merge-cost optimization.
+On the TPU mesh this directly shrinks the all-gather payload of the shard
+merge (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _probit(q: float) -> float:
+    """Φ^{-1}(q) — Acklam's rational approximation (|err| < 1.15e-9).
+
+    Dependency-free so the serving path never imports scipy.
+    """
+    if not 0.0 < q < 1.0:
+        raise ValueError(q)
+    a = [-3.969683028665376e01, 2.209460984245205e02, -2.759285104469687e02,
+         1.383577518672690e02, -3.066479806614716e01, 2.506628277459239e00]
+    b = [-5.447609879822406e01, 1.615858368580409e02, -1.556989798598866e02,
+         6.680131188771972e01, -1.328068155288572e01]
+    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e00,
+         -2.549732539343734e00, 4.374664141464968e00, 2.938163982698783e00]
+    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e00,
+         3.754408661907416e00]
+    plow, phigh = 0.02425, 1 - 0.02425
+    if q < plow:
+        u = math.sqrt(-2 * math.log(q))
+        return (((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4]) * u + c[5]) / (
+            (((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u + 1
+        )
+    if q > phigh:
+        u = math.sqrt(-2 * math.log(1 - q))
+        return -(((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4]) * u + c[5]) / (
+            (((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u + 1
+        )
+    u = q - 0.5
+    t = u * u
+    return (
+        (((((a[0] * t + a[1]) * t + a[2]) * t + a[3]) * t + a[4]) * t + a[5])
+        * u
+        / (((((b[0] * t + b[1]) * t + b[2]) * t + b[3]) * t + b[4]) * t + 1)
+    )
+
+
+def per_shard_topk(topk: int, num_shards: int, confidence: float = 0.95) -> int:
+    """Eq. (5)-(6).  perShardTopK = min(topK, ceil(cI * topK)).
+
+    The paper writes f(p) as "the (1 - p/2) quantile" with p called the
+    confidence; read literally with p=0.95 that gives a 0.525-quantile ≈ 0.06
+    which contradicts the stated intent (an upper confidence bound).  We take
+    the standard reading: f(p) = Φ^{-1}((1+p)/2), so p=0.95 → 1.96. With S=1
+    the formula degenerates to cI >= 1 so perShardTopK == topK, as it must.
+    """
+    if num_shards <= 1:
+        return topk
+    s_prime = 1.0 / num_shards
+    f = _probit((1.0 + confidence) / 2.0)
+    ci = s_prime + f * math.sqrt(s_prime * (1.0 - s_prime) / topk)
+    return min(topk, int(math.ceil(ci * topk)))
+
+
+# ---------------------------------------------------------------------------
+# Merging.  All merges operate on (B, c, ...) candidate lists with distances
+# where LOWER IS BETTER and invalid entries are (+inf dist, id -1).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("k",))
+def merge_topk(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Merge candidate lists along the last candidate axis.
+
+    dists/ids: (..., C).  Returns ((..., k) dists, (..., k) ids) sorted
+    ascending by distance.  Duplicate ids (a point returned by several
+    segments the query spilled to) are collapsed — keep the best copy.
+    """
+    # Collapse duplicates: sort by id, mark repeats, set their dist to +inf.
+    order = jnp.argsort(ids, axis=-1)
+    sid = jnp.take_along_axis(ids, order, axis=-1)
+    sd = jnp.take_along_axis(dists, order, axis=-1)
+    same = jnp.concatenate(
+        [jnp.zeros_like(sid[..., :1], dtype=bool), sid[..., 1:] == sid[..., :-1]],
+        axis=-1,
+    ) & (sid >= 0)
+    # among equal ids keep the first occurrence's best dist: sort puts equal
+    # ids adjacent but not dist-ordered; take cummin over runs via two-pass:
+    # simpler: a duplicate's dist may be better than the kept one, so instead
+    # of masking arbitrarily, reduce with segment-min over runs.
+    run_start = ~same
+    run_id = jnp.cumsum(run_start.astype(jnp.int32), axis=-1) - 1
+    # per-run min distance via scatter-min into a (num_runs<=C,) buffer
+    C = dists.shape[-1]
+
+    def per_row(sd_row, run_row, sid_row, same_row):
+        buf = jnp.full((C,), jnp.inf, dtype=sd_row.dtype)
+        buf = buf.at[run_row].min(sd_row)
+        best = buf[run_row]
+        keep = (~same_row) & (sid_row >= 0)
+        return jnp.where(keep, best, jnp.inf)
+
+    flat = lambda a: a.reshape((-1, C))
+    dd = jax.vmap(per_row)(flat(sd), flat(run_id), flat(sid), flat(same))
+    dd = dd.reshape(sd.shape)
+    neg, idx = jax.lax.top_k(-dd, k)
+    out_d = -neg
+    out_i = jnp.take_along_axis(sid, idx, axis=-1)
+    out_i = jnp.where(jnp.isinf(out_d), -1, out_i)
+    return out_d, out_i
+
+
+def merge_topk_np(dists: np.ndarray, ids: np.ndarray, k: int):
+    """Numpy reference of merge_topk (used by the offline path and tests)."""
+    *lead, C = dists.shape
+    dists2 = dists.reshape(-1, C)
+    ids2 = ids.reshape(-1, C)
+    out_d = np.full((dists2.shape[0], k), np.inf, dtype=dists.dtype)
+    out_i = np.full((dists2.shape[0], k), -1, dtype=ids.dtype)
+    for r in range(dists2.shape[0]):
+        seen: dict[int, float] = {}
+        for d, i in zip(dists2[r], ids2[r]):
+            if i < 0 or np.isinf(d):
+                continue
+            if i not in seen or d < seen[i]:
+                seen[int(i)] = float(d)
+        pairs = sorted((d, i) for i, d in seen.items())[:k]
+        for c, (d, i) in enumerate(pairs):
+            out_d[r, c] = d
+            out_i[r, c] = i
+    return out_d.reshape(*lead, k), out_i.reshape(*lead, k)
+
+
+def two_level_merge_np(
+    seg_dists: np.ndarray,
+    seg_ids: np.ndarray,
+    topk: int,
+    confidence: float = 0.95,
+):
+    """Full two-level merge (offline path).
+
+    seg_dists/seg_ids: (S, m, B, c) per (shard, segment) candidates.
+    Level 1 (inside shard): merge over segments -> (S, B, pstk).
+    Level 2 (broker):       merge over shards   -> (B, topk).
+
+    perShardTopK trims level-1 output; the paper propagates the *shard* level
+    perShardTopK to segments rather than trimming per-segment (§5.3.2).
+    """
+    S, m, B, c = seg_dists.shape
+    pstk = per_shard_topk(topk, S, confidence)
+    shard_d = np.empty((S, B, pstk), dtype=seg_dists.dtype)
+    shard_i = np.empty((S, B, pstk), dtype=seg_ids.dtype)
+    for s in range(S):
+        d = np.moveaxis(seg_dists[s], 0, -1).reshape(B, m * c)
+        i = np.moveaxis(seg_ids[s], 0, -1).reshape(B, m * c)
+        shard_d[s], shard_i[s] = merge_topk_np(d, i, pstk)
+    d = np.moveaxis(shard_d, 0, -1).reshape(B, S * pstk)
+    i = np.moveaxis(shard_i, 0, -1).reshape(B, S * pstk)
+    return merge_topk_np(d, i, topk)

@@ -1,0 +1,278 @@
+"""LANNS segmenters (paper §4.3): RS, RH, APD with virtual/physical spill.
+
+A segmenter maps points to segments at index time, and queries to one-or-few
+segments at query time.  The tree segmenters (RH, APD) learn a complete binary
+tree of depth L (``2**L`` leaves = segments per shard).  At each internal node:
+
+* a hyperplane direction ``h`` is chosen —
+  - RH:  uniformly at random from the unit sphere (Randomized Partition
+    Trees, Dasgupta & Sinha 2015);
+  - APD: the second-largest right singular vector of the (subsampled) data
+    matrix reaching that node — the practical sparsest-cut surrogate of
+    McCartin-Lim et al. 2012 / Trevisan 2013 that the paper adopts (§4.3.3);
+* the split point is ``median(X @ h)``;
+* spill boundaries ``lo/hi`` are the ``0.5 ± alpha`` fractiles of ``X @ h``.
+
+Insertion routes a point to ONE leaf (virtual spill) or to BOTH children
+whenever its projection lies in [lo, hi] (physical spill).  A query with
+virtual spill is routed to both children when its projection lies in [lo, hi]
+(paper Figure 3); with physical spill the query goes to exactly one leaf
+because the data was duplicated instead.
+
+The learned tree is stored as flat arrays in binary-heap order (node i has
+children 2i+1 / 2i+2), so routing is fully vectorized: a (B, n_nodes)
+projection matmul followed by L levels of boolean mask propagation — this is
+the form used on-device by the TPU serving path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.common.utils import stable_hash_u64
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmenterConfig:
+    kind: str = "rh"  # 'rs' | 'rh' | 'apd'
+    num_segments: int = 8  # must be a power of two for tree segmenters
+    alpha: float = 0.15  # spill fractile (paper uses 0.15 => ~30% spill/level)
+    spill: str = "virtual"  # 'virtual' | 'physical' | 'none'
+    seed: int = 0
+    apd_power_iters: int = 20  # power-iteration steps for the APD direction
+    sample_size: int = 250_000  # subsample for learning (paper uses 250k)
+
+    @property
+    def depth(self) -> int:
+        d = int(np.log2(self.num_segments))
+        if 2**d != self.num_segments:
+            raise ValueError("tree segmenters need power-of-two num_segments")
+        return d
+
+
+# ---------------------------------------------------------------------------
+
+
+class RandomSegmenter:
+    """RS (§4.3.1): modulo/hash segmenter. Data-independent.
+
+    Points go to ``hash(key) % m``; queries go to ALL segments (no locality).
+    """
+
+    def __init__(self, config: SegmenterConfig):
+        self.config = config
+        self.kind = "rs"
+
+    def fit(self, data: np.ndarray) -> "RandomSegmenter":
+        return self  # nothing to learn
+
+    def route_points(self, x: np.ndarray, keys: Optional[np.ndarray] = None):
+        """Returns a (n, m) bool mask (RS: exactly one True per row)."""
+        m = self.config.num_segments
+        n = x.shape[0]
+        if keys is None:
+            keys = np.arange(n, dtype=np.uint64)
+        seg = (stable_hash_u64(keys, salt=self.config.seed) % np.uint64(m)).astype(
+            np.int64
+        )
+        mask = np.zeros((n, m), dtype=bool)
+        mask[np.arange(n), seg] = True
+        return mask
+
+    def route_queries(self, q: np.ndarray) -> np.ndarray:
+        return np.ones((q.shape[0], self.config.num_segments), dtype=bool)
+
+    def tree_arrays(self):
+        return None
+
+
+# ---------------------------------------------------------------------------
+
+
+def _rh_direction(rng: np.random.Generator, d: int) -> np.ndarray:
+    h = rng.standard_normal(d).astype(np.float32)
+    return h / np.linalg.norm(h)
+
+
+def _apd_direction(x: np.ndarray, iters: int, rng: np.random.Generator) -> np.ndarray:
+    """Second-largest right singular vector of x via block power iteration.
+
+    The paper computes the 2nd right singular vector of D (via Spark MLlib
+    SVD).  We run subspace iteration on D^T D with a 2-column block, which is
+    cheap (O(n d) per iter) and deterministic given the seed.  Falls back to
+    the exact SVD for small problems to keep tests tight.
+    """
+    n, d = x.shape
+    if n * d <= 2_000_000 or d <= 64:
+        # exact — numpy SVD of the (n, d) block
+        _, _, vt = np.linalg.svd(x, full_matrices=False)
+        v = vt[1] if vt.shape[0] > 1 else vt[0]
+        return (v / np.linalg.norm(v)).astype(np.float32)
+    v = rng.standard_normal((d, 2)).astype(np.float64)
+    v, _ = np.linalg.qr(v)
+    xf = x.astype(np.float64)
+    for _ in range(iters):
+        w = xf.T @ (xf @ v)  # (d, 2)
+        v, _ = np.linalg.qr(w)
+    # order columns by Rayleigh quotient, return the 2nd
+    scores = np.einsum("dk,dk->k", v, xf.T @ (xf @ v))
+    order = np.argsort(-scores)
+    v2 = v[:, order[1]]
+    return (v2 / np.linalg.norm(v2)).astype(np.float32)
+
+
+class TreeSegmenter:
+    """RH / APD hyperplane-tree segmenter with spill (paper §4.3.2-4.3.3).
+
+    Flat-array tree (heap order). ``n_internal = num_segments - 1``.
+      hyperplanes  (n_internal, d) float32
+      split        (n_internal,)  — median of projections at that node
+      lo, hi       (n_internal,)  — 0.5∓/±alpha fractiles (spill band)
+    """
+
+    def __init__(self, config: SegmenterConfig):
+        if config.kind not in ("rh", "apd"):
+            raise ValueError(config.kind)
+        self.config = config
+        self.kind = config.kind
+        self.hyperplanes: Optional[np.ndarray] = None
+        self.split: Optional[np.ndarray] = None
+        self.lo: Optional[np.ndarray] = None
+        self.hi: Optional[np.ndarray] = None
+
+    # -- learning -----------------------------------------------------------
+
+    def fit(self, data: np.ndarray) -> "TreeSegmenter":
+        cfg = self.config
+        rng = np.random.default_rng(cfg.seed)
+        data = np.asarray(data, dtype=np.float32)
+        if data.shape[0] > cfg.sample_size:
+            idx = rng.choice(data.shape[0], cfg.sample_size, replace=False)
+            data = data[idx]
+        d = data.shape[1]
+        n_internal = cfg.num_segments - 1
+        H = np.zeros((n_internal, d), dtype=np.float32)
+        S = np.zeros(n_internal, dtype=np.float32)
+        LO = np.zeros(n_internal, dtype=np.float32)
+        HI = np.zeros(n_internal, dtype=np.float32)
+
+        # recursive median splits; node 0 is the root.
+        def build(node: int, rows: np.ndarray):
+            if node >= n_internal:
+                return
+            x = data[rows]
+            if self.kind == "rh":
+                h = _rh_direction(rng, d)
+            else:
+                h = _apd_direction(x, cfg.apd_power_iters, rng)
+            u = x @ h
+            S[node] = np.median(u)
+            LO[node] = np.quantile(u, 0.5 - cfg.alpha)
+            HI[node] = np.quantile(u, 0.5 + cfg.alpha)
+            H[node] = h
+            left = rows[u < S[node]]
+            right = rows[u >= S[node]]
+            build(2 * node + 1, left)
+            build(2 * node + 2, right)
+
+        build(0, np.arange(data.shape[0]))
+        self.hyperplanes, self.split, self.lo, self.hi = H, S, LO, HI
+        return self
+
+    def _require_fit(self):
+        if self.hyperplanes is None:
+            raise RuntimeError("segmenter not fitted")
+
+    # -- routing ------------------------------------------------------------
+
+    def _route(self, x: np.ndarray, spill_band: bool) -> np.ndarray:
+        """Tree routing, vectorized.  Returns (n, num_segments) bool mask.
+
+        spill_band=True routes a row to BOTH children when its projection is
+        inside [lo, hi] at that node; False uses the pure median split.
+        """
+        self._require_fit()
+        cfg = self.config
+        n = x.shape[0]
+        proj = x.astype(np.float32) @ self.hyperplanes.T  # (n, n_internal)
+        # mask over nodes of the implicit complete tree, level by level
+        level_nodes = [0]
+        mask = {0: np.ones(n, dtype=bool)}
+        for _ in range(cfg.depth):
+            next_mask = {}
+            for node in level_nodes:
+                m = mask[node]
+                p = proj[:, node]
+                if spill_band:
+                    go_left = p <= self.hi[node]
+                    go_right = p >= self.lo[node]
+                else:
+                    go_left = p < self.split[node]
+                    go_right = ~go_left
+                l, r = 2 * node + 1, 2 * node + 2
+                next_mask[l] = next_mask.get(l, False) | (m & go_left)
+                next_mask[r] = next_mask.get(r, False) | (m & go_right)
+            mask = next_mask
+            level_nodes = sorted(mask.keys())
+        n_internal = cfg.num_segments - 1
+        out = np.zeros((n, cfg.num_segments), dtype=bool)
+        for node in level_nodes:
+            out[:, node - n_internal] = mask[node]
+        return out
+
+    def route_points(self, x: np.ndarray, keys: Optional[np.ndarray] = None):
+        """(n, m) bool — one leaf per point (virtual) or spill band (physical)."""
+        physical = self.config.spill == "physical"
+        return self._route(x, spill_band=physical)
+
+    def route_queries(self, q: np.ndarray) -> np.ndarray:
+        """(B, m) bool — spill band for virtual spill, single leaf otherwise."""
+        virtual = self.config.spill == "virtual"
+        return self._route(q, spill_band=virtual)
+
+    def tree_arrays(self):
+        """Arrays for the on-device (jit) router in serve/retrieval.py."""
+        self._require_fit()
+        return {
+            "hyperplanes": self.hyperplanes,
+            "split": self.split,
+            "lo": self.lo,
+            "hi": self.hi,
+            "depth": self.config.depth,
+        }
+
+
+# ---------------------------------------------------------------------------
+
+
+def make_segmenter(config: SegmenterConfig):
+    if config.kind == "rs":
+        return RandomSegmenter(config)
+    return TreeSegmenter(config)
+
+
+def expected_spill_fraction(alpha: float, depth: int) -> float:
+    """Expected fraction of queries routed to >1 segment after `depth` levels.
+
+    Per level a query falls in the band with probability ~2*alpha; the paper
+    quotes "~30% queries to both partitions at any level" for alpha=0.15.
+    """
+    return 1.0 - (1.0 - 2.0 * alpha) ** depth
+
+
+def failure_probability(levels: np.ndarray, alpha: float, n: int) -> np.ndarray:
+    """Paper Figure 4: P(L) ≈ sum_{l=1..L} 1 / (2 (0.5+alpha)^l n).
+
+    The paper approximates Φ'_m ≈ 1/(2 alpha) ... and plots
+    P(L) ≈ Σ_{l=1}^{L} 1/(2 (0.5+α)^l n) for n = 10_000.  We reproduce that
+    exact curve for the Figure-4 benchmark.
+    """
+    levels = np.asarray(levels)
+    out = np.zeros(levels.shape, dtype=np.float64)
+    for i, L in np.ndenumerate(levels):
+        ls = np.arange(1, int(L) + 1, dtype=np.float64)
+        out[i] = np.sum(1.0 / (2.0 * (0.5 + alpha) ** ls * n))
+    return out

@@ -1,0 +1,17 @@
+from repro.data.synthetic import (
+    clustered_vectors,
+    criteo_like_batch,
+    power_law_graph,
+    random_molecule_batch,
+    sift_like,
+    token_batch,
+)
+
+__all__ = [
+    "clustered_vectors",
+    "criteo_like_batch",
+    "power_law_graph",
+    "random_molecule_batch",
+    "sift_like",
+    "token_batch",
+]

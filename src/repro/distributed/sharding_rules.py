@@ -1,0 +1,80 @@
+"""Sharding rules: logical-axis annotations decoupled from the mesh.
+
+Models never import a mesh.  They call ``ctx.constrain(x, *logical_axes)``
+with *logical* names; ShardingCtx maps logical -> mesh axes and inserts
+``with_sharding_constraint`` (a no-op off-mesh, so smoke tests run unchanged
+on one CPU device).
+
+Logical axes used across the zoo:
+  batch    -> ("pod"?, "data")   activations' batch dim (pod only when the
+                                  pod axis data-parallelizes)
+  model    -> ("model",)          TP: heads / d_ff / vocab / experts
+  seq      -> (None)              sequence (sharded only for long-decode KV)
+  kv_seq   -> ("model",)          sequence-sharded KV cache (flash-decoding
+                                  partial-softmax merge comes from GSPMD)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "fsdp": ("data",),  # weight-sharding axis (ZeRO-3 style)
+    "model": ("model",),
+    "expert": ("model",),
+    "seq": (),
+    "kv_seq": (),
+    "vocab": ("model",),
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Logical-axis -> mesh-axis mapping + constraint insertion."""
+
+    mesh: Optional[Mesh] = None
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def spec(self, *logical) -> P:
+        parts = []
+        for name in logical:
+            if name is None:
+                parts.append(None)
+                continue
+            axes = self.rules.get(name, ())
+            axes = tuple(a for a in axes if self.mesh and a in self.mesh.shape)
+            if len(axes) == 0:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        return P(*parts)
+
+    def constrain(self, x, *logical):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*logical))
+        )
+
+    def named(self, *logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+NULL_CTX = ShardingCtx(mesh=None)
+
+
+def batch_axes_with_pod(ctx: ShardingCtx) -> ShardingCtx:
+    """Return a ctx whose 'batch' logical axis also spans the pod axis —
+    used when the pod dimension data-parallelizes (default multi-pod mode)."""
+    rules = dict(ctx.rules)
+    rules["batch"] = ("pod", "data")
+    return dataclasses.replace(ctx, rules=rules)

@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+The LM cells currently use a pure-jnp chunked attention (exact, memory-
+bounded) — this kernel is the TPU-native version of the same online-softmax
+algorithm with explicit VMEM tiling: one (Bq) query block stays resident
+while the kernel streams kv blocks, carrying (m, l, acc) in VMEM scratch so
+the (S, S) score matrix never exists in HBM.
+
+Layout: q (B*H, S, d), k/v (B*H, S, d) — the wrapper folds batch and heads
+into the grid's first dimension.  Causal masking is done blockwise: kv blocks
+strictly above the diagonal are skipped via the block index map (their loads
+are masked), diagonal blocks apply the triangular mask.
+
+Validated in interpret mode against models/layers.dot_attention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flash_fwd_kernel(
+    q_ref,  # (1, BQ, D)
+    k_ref,  # (1, BK, D)
+    v_ref,  # (1, BK, D)
+    o_ref,  # (1, BQ, D)
+    m_scr,  # (BQ, 1) f32
+    l_scr,  # (BQ, 1) f32
+    acc_scr,  # (BQ, D) f32
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    seq_len: int,
+    causal: bool,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, -jnp.inf, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    # skip fully-masked blocks (strictly above the causal diagonal)
+    run = (not causal) or True
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+        valid = k_pos < seq_len
+        if causal:
+            valid = valid & (k_pos <= q_pos)
+        s = jnp.where(valid, s, -jnp.inf)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.where(
+            jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0
+        )
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    if causal:
+        # diagonal/below blocks only; above-diagonal blocks are no-ops
+        @pl.when(ik * block_k <= iq * block_q + block_q - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "scale"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (BH, S, D)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Forward flash attention over (batch*heads, seq, head_dim) arrays.
+
+    seq is padded to the block size internally; padded kv positions are
+    masked, padded q rows are sliced away.
+    """
+    BH, S, D = q.shape
+    scale = scale or (1.0 / np.sqrt(D))
+    S_pad = -(-S // max(block_q, block_k)) * max(block_q, block_k)
+    if S_pad != S:
+        pad = ((0, 0), (0, S_pad - S), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    nq = S_pad // block_q
+    nk = S_pad // block_k
+    kernel = functools.partial(
+        _flash_fwd_kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=S,
+        causal=causal,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, interpret=False):
+    """(B, S, H, D) convenience wrapper matching models/layers layouts."""
+    B, S, H, D = q.shape
+    fold = lambda x: jnp.moveaxis(x, 2, 1).reshape(B * H, S, D)
+    out = flash_attention(
+        fold(q), fold(k), fold(v), causal=causal, interpret=interpret
+    )
+    return jnp.moveaxis(out.reshape(B, H, S, D), 1, 2)

@@ -1,0 +1,125 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``distance_topk`` is the one entry point the rest of the system uses; it
+handles padding (queries to the q-tile, corpus to the n-block, feature dim to
+the lane width, k to the kernel's power-of-two buffer), metric normalization,
+and backend selection:
+
+* on TPU: the fused Pallas kernel (distance_topk_pallas);
+* elsewhere (this CPU container): the blocked-scan jnp path, which is
+  semantically identical (same streaming merge) and XLA-fused;
+* interpret=True forces the Pallas kernel through the interpreter — used by
+  the kernel tests to validate the TPU code path on CPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.utils import round_up
+from repro.kernels import ref
+from repro.kernels.distance_topk import distance_topk_pallas
+
+LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length() if n & (n - 1) else max(n, 1)
+
+
+def distance_topk(
+    q,
+    x,
+    k: int,
+    metric: str = "l2",
+    *,
+    block_q: int = 8,
+    block_n: int = 256,
+    backend: str = "auto",  # 'auto' | 'pallas' | 'pallas_interpret' | 'jnp'
+):
+    """Top-k nearest rows of ``x`` for each row of ``q``.
+
+    Returns (dists (B, k) ascending, ids (B, k) int32; id -1 where fewer than
+    k valid rows exist).  For metric='l2' distances are true squared L2; for
+    'ip'/'cos' they are negative (inner product / cosine similarity).
+    """
+    q = jnp.asarray(q)
+    x = jnp.asarray(x)
+    B, D = q.shape
+    N = x.shape[0]
+    if k > N:  # fewer corpus rows than requested: pad with (inf, -1)
+        d, i = distance_topk(
+            q, x, N, metric, block_q=block_q, block_n=block_n, backend=backend
+        )
+        pad_d = jnp.full((B, k - N), jnp.inf, d.dtype)
+        pad_i = jnp.full((B, k - N), -1, i.dtype)
+        return jnp.concatenate([d, pad_d], 1), jnp.concatenate([i, pad_i], 1)
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+
+    if metric == "cos":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+        metric_k = "ip"
+    else:
+        metric_k = metric
+
+    if backend == "jnp":
+        return ref.distance_topk_blocked(
+            q.astype(jnp.float32), x.astype(jnp.float32), k, metric
+        )
+
+    k_pad = max(_next_pow2(k), LANE)
+    if k_pad > 256:
+        # the in-kernel buffer tops out at 256; larger k streams through the
+        # blocked jnp merge instead (rare: paper's k is 100-200).
+        return ref.distance_topk_blocked(
+            q.astype(jnp.float32), x.astype(jnp.float32), k, metric
+        )
+    # pick block_n so the in-kernel merge length k_pad + block_n is a power
+    # of two (bitonic network) and a lane multiple.
+    block_n = max(block_n, k_pad)
+    block_n = _next_pow2(k_pad + block_n) - k_pad
+
+    D_pad = round_up(D, LANE)
+    B_pad = round_up(B, block_q)
+    N_pad = round_up(N, block_n)
+    qp = jnp.zeros((B_pad, D_pad), jnp.float32).at[:B, :D].set(q.astype(jnp.float32))
+    xp = jnp.zeros((N_pad, D_pad), jnp.float32).at[:N, :D].set(x.astype(jnp.float32))
+
+    out_d, out_i = distance_topk_pallas(
+        qp,
+        xp,
+        k_pad=k_pad,
+        block_q=block_q,
+        block_n=block_n,
+        n_valid=N,
+        metric=metric_k,
+        interpret=(backend == "pallas_interpret") or not _on_tpu(),
+    )
+    out_d, out_i = out_d[:B, :k], out_i[:B, :k]
+    if metric == "l2":
+        qn = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+        out_d = jnp.where(jnp.isinf(out_d), out_d, out_d + qn)
+    out_i = jnp.where(jnp.isinf(out_d), -1, out_i)
+    return out_d, out_i
+
+
+@partial(jax.jit, static_argnames=("k", "metric"))
+def distance_topk_jit(q, x, k: int, metric: str = "l2"):
+    """Pre-jitted jnp path (stable signature for serving loops)."""
+    return ref.distance_topk_blocked(q, x, k, metric)
+
+
+def distance_topk_np(q: np.ndarray, x: np.ndarray, k: int, metric: str = "l2"):
+    """Numpy convenience wrapper (offline pipeline)."""
+    d, i = distance_topk(q, x, k, metric, backend="jnp")
+    return np.asarray(d), np.asarray(i)

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth that kernel tests assert against (interpret mode),
+and the CPU execution path for benchmarks (interpret-mode Pallas is a Python
+loop and not representative of anything).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def distance_matrix(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """(B, d) x (N, d) -> (B, N) distances, lower is better.
+
+    l2:  true squared euclidean distance.
+    ip:  negative inner product.
+    cos: negative cosine similarity (inputs need not be normalized).
+    """
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=-1, keepdims=True)
+        xn = jnp.sum(x * x, axis=-1)
+        return qn - 2.0 * (q @ x.T) + xn[None, :]
+    if metric == "ip":
+        return -(q @ x.T)
+    if metric == "cos":
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        xn = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+        return -(qn @ xn.T)
+    raise ValueError(metric)
+
+
+@partial(jax.jit, static_argnames=("k", "metric"))
+def distance_topk_ref(q: jnp.ndarray, x: jnp.ndarray, k: int, metric: str = "l2"):
+    """Oracle: full (B, N) distance matrix + lax.top_k.
+
+    Returns (dists (B, k) ascending, ids (B, k) int32).
+    """
+    d = distance_matrix(q, x, metric)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k", "metric", "block_n"))
+def distance_topk_blocked(
+    q: jnp.ndarray, x: jnp.ndarray, k: int, metric: str = "l2", block_n: int = 4096
+):
+    """Memory-bounded oracle: scan over N blocks carrying a running top-k.
+
+    Semantically identical to distance_topk_ref but never materializes the
+    full (B, N) matrix — this is the production CPU/brute-force path and the
+    reference for the streaming behaviour of the Pallas kernel.
+    """
+    B, dim = q.shape
+    N = x.shape[0]
+    nb = -(-N // block_n)
+    n_pad = nb * block_n
+    x_pad = jnp.pad(x, ((0, n_pad - N), (0, 0)))
+    x_blocks = x_pad.reshape(nb, block_n, dim)
+
+    init_d = jnp.full((B, k), jnp.inf, dtype=jnp.float32)
+    init_i = jnp.full((B, k), -1, dtype=jnp.int32)
+
+    def step(carry, inp):
+        run_d, run_i = carry
+        blk_idx, xb = inp
+        d = distance_matrix(q, xb, metric).astype(jnp.float32)
+        gid = blk_idx * block_n + jnp.arange(block_n, dtype=jnp.int32)
+        valid = gid < N
+        d = jnp.where(valid[None, :], d, jnp.inf)
+        cat_d = jnp.concatenate([run_d, d], axis=1)
+        cat_i = jnp.concatenate(
+            [run_i, jnp.broadcast_to(gid[None, :], (B, block_n))], axis=1
+        )
+        neg, idx = jax.lax.top_k(-cat_d, k)
+        return (-neg, jnp.take_along_axis(cat_i, idx, axis=1)), None
+
+    (out_d, out_i), _ = jax.lax.scan(
+        step, (init_d, init_i), (jnp.arange(nb, dtype=jnp.int32), x_blocks)
+    )
+    out_i = jnp.where(jnp.isinf(out_d), -1, out_i)
+    return out_d, out_i
+
+
+def bitonic_topk_ref(d: jnp.ndarray, i: jnp.ndarray, k: int):
+    """Oracle for the in-kernel bitonic partial sort: ascending-by-distance
+    (dist, id) pairs, first k returned."""
+    order = jnp.argsort(d, axis=-1)
+    return (
+        jnp.take_along_axis(d, order, axis=-1)[..., :k],
+        jnp.take_along_axis(i, order, axis=-1)[..., :k],
+    )

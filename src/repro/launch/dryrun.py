@@ -1,0 +1,426 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first executable statements: jax locks the
+device count at first initialization, and the production meshes need 512
+placeholder host devices.  (Smoke tests / benches never import this module.)
+
+Per cell this produces a JSON record with:
+  * memory_analysis  — per-device argument/output/temp/generated-code bytes
+                       (proof the cell fits a 16 GB v5e),
+  * cost_analysis    — per-device HLO flops / bytes accessed,
+  * collective bytes — parsed from the compiled (post-SPMD) HLO: operand
+                       bytes of all-gather / all-reduce / reduce-scatter /
+                       all-to-all / collective-permute ops,
+  * model_flops      — 6*N*D (train) or 2*N*D (serve) analytic reference,
+used by benchmarks/roofline.py to derive the three roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+  PYTHONPATH=src python -m repro.launch.dryrun --lanns    # LANNS serve cells
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\([^)]*\)|tuple\([^)]*\)|"
+    r"(?:(\w+)\[[^\]]*\]|\w+)\s*)?"
+)
+
+_OP_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,4096]{1,0}' -> bytes.  Tuple shapes handled by caller."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum OUTPUT-shape bytes of every collective op in post-SPMD HLO.
+
+    Output shape is what lands on each device, i.e. per-device collective
+    traffic received (the roofline-relevant quantity for link bandwidth).
+    Ops inside while-loop bodies are counted once per occurrence in the text;
+    scanned (rolled) loops under-report by the trip count, so the LM stacks
+    report the per-layer collective x1 — benchmarks/roofline.py multiplies
+    by the scan trip count recorded per cell.
+    """
+    out: dict = {k: {"count": 0, "bytes": 0} for k in _OP_KINDS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _OP_KINDS:
+            # match: <shape> kind(...) or (tuple shapes) kind(...)
+            km = re.match(
+                r"(\([^)]*\)|[\w\[\],{}]+)\s+" + kind + r"(-start|-done)?\(", rhs
+            )
+            if km:
+                if km.group(2) == "-done":
+                    continue  # counted at -start
+                shape_part = km.group(1)
+                if shape_part.startswith("("):
+                    shapes = re.findall(r"\w+\[[\d,]*\]", shape_part)
+                    b = sum(_shape_bytes(x) for x in shapes)
+                else:
+                    b = _shape_bytes(shape_part)
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += b
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if k in _OP_KINDS)
+    return out
+
+
+def count_scan_trips(hlo_text: str) -> int:
+    """Max while-loop trip count (scan over layers) from HLO annotations."""
+    trips = [int(t) for t in re.findall(r'trip_count["\s:=]+(\d+)', hlo_text)]
+    return max(trips, default=1)
+
+
+# ---------------------------------------------------------------------------
+# cell runners
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch_id: str, cell_name: str, *, multi_pod: bool, out_dir: str,
+             num_micro: int = 0, label: str = ""):
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    arch = get_arch(arch_id)
+    if num_micro:
+        import copy
+
+        arch = copy.copy(arch)
+        arch.num_micro = num_micro
+    cell = arch.cells[cell_name]
+    rec = {
+        "arch": arch_id,
+        "cell": cell_name + label,
+        "label": label,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "status": "error",
+    }
+    t0 = time.time()
+    try:
+        spec = arch.build_cell(cell, mesh)
+        jitted = jax.jit(
+            spec.fn,
+            in_shardings=spec.in_shardings,
+            out_shardings=spec.out_shardings,
+            donate_argnums=spec.donate_argnums,
+        )
+        t_lower0 = time.time()
+        lowered = jitted.lower(*spec.args)
+        rec["lower_seconds"] = time.time() - t_lower0
+        t_c0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_seconds"] = time.time() - t_c0
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes_from_hlo(hlo)
+        rec["scan_trips"] = count_scan_trips(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        from repro.launch.hlo_cost import analyze
+
+        la = analyze(hlo)
+        rec["cost_loopaware"] = {
+            "flops": la["flops"],
+            "bytes": la["bytes"],
+            "collective_bytes": la["collective_bytes"],
+            "collective_total_bytes": la["collective_total_bytes"],
+        }
+        rec["model_flops_per_step"] = spec.model_flops_per_step
+        rec["note"] = spec.note
+        rec.update(spec.aux_info)
+        # CPU-backend artifact: bf16 dynamic-update-slice is emulated via an
+        # f32 copy (verified on a minimal case); TPU updates bf16 caches in
+        # place (with donation).  Record the adjusted temp for decode cells.
+        if "cache_bytes_device" in spec.aux_info:
+            art = 2 * spec.aux_info["cache_bytes_device"]
+            rec["temp_bytes_tpu_estimate"] = max(
+                rec["memory"]["temp_bytes"] - art,
+                int(0.1 * rec["memory"]["temp_bytes"]),
+            )
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record and continue the matrix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_seconds"] = time.time() - t0
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch_id}__{cell_name}{label}__{rec['mesh']}".replace("/", "_")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=2)
+        if rec["status"] == "ok":
+            import gzip
+
+            with gzip.open(os.path.join(out_dir, tag + ".hlo.gz"), "wt") as f:
+                f.write(hlo)
+    return rec
+
+
+def run_lanns_cell(*, multi_pod: bool, out_dir: str, mode: str = "routed",
+                   corpus_n: int = 180_000_000, dim: int = 50,
+                   batch_per_device: int = 64, topk: int = 100,
+                   use_pstk: bool = True, num_segments: int = 8,
+                   scan_dtype: str = "float32", capacity_factor: float = 1.5,
+                   block_n: int = 2048, label: str = "",
+                   pod_sharded_corpus: bool = False):
+    """Dry-run the distributed LANNS serve step at paper scale (People:
+    180M x 50d).  Corpus ShapeDtypeStructs only — nothing allocated."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.lanns import LannsConfig
+    from repro.launch.mesh import make_production_mesh
+    from repro.serve.retrieval import make_serve_fn
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    corpus_axes = (
+        ("pod", "model") if (multi_pod and pod_sharded_corpus) else ("model",)
+    )
+    S = 1
+    for a in corpus_axes:
+        S *= mesh.shape[a]
+    data_axes = ("pod", "data") if (multi_pod and not pod_sharded_corpus) else ("data",)
+    n_lanes = int(np.prod([mesh.shape[a] for a in data_axes]))
+    B = batch_per_device * n_lanes
+    cfg = LannsConfig(
+        num_shards=S, num_segments=num_segments, segmenter="apd",
+        alpha=0.15, metric="l2", engine="scan",
+    )
+    n_seg = int(np.ceil(corpus_n / S / num_segments / 8)) * 8
+    rec = {
+        "arch": "lanns-people180m",
+        "cell": f"serve_{mode}" + ("" if use_pstk else "_nopstk") + label,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "status": "error",
+        "corpus_n": corpus_n,
+        "dim": dim,
+        "topk": topk,
+    }
+    t0 = time.time()
+    try:
+        serve_fn, sh = make_serve_fn(
+            mesh, cfg, topk=topk, mode=mode,
+            batch_per_device=batch_per_device,
+            use_per_shard_topk=use_pstk,
+            query_axes=data_axes,
+            corpus_axes=corpus_axes,
+            capacity_factor=capacity_factor,
+            block_n=block_n,
+        )
+        dt = jnp.dtype(scan_dtype)
+        q_abs = jax.ShapeDtypeStruct((B, dim), jnp.float32)
+        c_abs = jax.ShapeDtypeStruct((S, num_segments, n_seg, dim), dt)
+        i_abs = jax.ShapeDtypeStruct((S, num_segments, n_seg), jnp.int32)
+        n_abs = jax.ShapeDtypeStruct((S, num_segments, n_seg), jnp.float32)
+        scale_abs = (
+            jax.ShapeDtypeStruct((dim,), jnp.float32)
+            if scan_dtype == "int8" else None
+        )
+        n_int = num_segments - 1
+        tree = {
+            "hyperplanes": jax.ShapeDtypeStruct((n_int, dim), jnp.float32),
+            "split": jax.ShapeDtypeStruct((n_int,), jnp.float32),
+            "lo": jax.ShapeDtypeStruct((n_int,), jnp.float32),
+            "hi": jax.ShapeDtypeStruct((n_int,), jnp.float32),
+        }
+
+        if scale_abs is not None:
+            jitted = jax.jit(
+                lambda q, c, i, nr, t, sc: serve_fn(
+                    q, c, i, nr, t if mode == "routed" else None, sc
+                )
+            )
+            lowered = jitted.lower(q_abs, c_abs, i_abs, n_abs, tree, scale_abs)
+        else:
+            jitted = jax.jit(
+                lambda q, c, i, nr, t: serve_fn(
+                    q, c, i, nr, t if mode == "routed" else None
+                )
+            )
+            lowered = jitted.lower(q_abs, c_abs, i_abs, n_abs, tree)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes_from_hlo(hlo)
+        rec["scan_trips"] = count_scan_trips(hlo)
+        from repro.launch.hlo_cost import analyze
+
+        la = analyze(hlo)
+        rec["cost_loopaware"] = {
+            "flops": la["flops"],
+            "bytes": la["bytes"],
+            "collective_bytes": la["collective_bytes"],
+            "collective_total_bytes": la["collective_total_bytes"],
+        }
+        rec["per_shard_topk"] = sh["per_shard_topk"]
+        rec["capacity"] = sh["capacity"]
+        rec["model_flops_per_step"] = (
+            2.0 * B * dim * (corpus_n / S)  # each query scans its shard once
+            * (1.0 if mode == "full" else
+               (1 + 2 * cfg.alpha) ** int(np.log2(num_segments)) / num_segments)
+        )
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_seconds"] = time.time() - t0
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"lanns__{rec['cell']}__{rec['mesh']}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=2)
+        if rec["status"] == "ok":
+            import gzip
+
+            with gzip.open(os.path.join(out_dir, tag + ".hlo.gz"), "wt") as f:
+                f.write(hlo)
+    return rec
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--cell", default=None)
+    p.add_argument("--num-micro", type=int, default=0)
+    p.add_argument("--label", default="")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--lanns", action="store_true")
+    p.add_argument("--lanns-mode", default="routed")
+    p.add_argument("--no-pstk", action="store_true")
+    p.add_argument("--lanns-dtype", default="float32")
+    p.add_argument("--lanns-cf", type=float, default=1.5)
+    p.add_argument("--lanns-block", type=int, default=2048)
+    p.add_argument("--lanns-label", default="")
+    p.add_argument("--lanns-pod-sharded", action="store_true")
+    p.add_argument("--lanns-segments", type=int, default=8)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--out", default="results/dryrun")
+    args = p.parse_args(argv)
+
+    from repro.configs import ARCH_IDS, get_arch
+
+    results = []
+    if args.lanns:
+        rec = run_lanns_cell(
+            multi_pod=args.multi_pod, out_dir=args.out, mode=args.lanns_mode,
+            use_pstk=not args.no_pstk, scan_dtype=args.lanns_dtype,
+            capacity_factor=args.lanns_cf, block_n=args.lanns_block,
+            label=args.lanns_label,
+            pod_sharded_corpus=args.lanns_pod_sharded,
+            num_segments=args.lanns_segments,
+        )
+        results.append(rec)
+    elif args.all:
+        for aid in ARCH_IDS:
+            for cname in get_arch(aid).cell_names():
+                rec = run_cell(
+                    aid, cname, multi_pod=args.multi_pod, out_dir=args.out
+                )
+                print(
+                    f"[{rec['status']:5s}] {aid:22s} {cname:14s} "
+                    f"{rec.get('compile_seconds', 0):6.1f}s compile  "
+                    f"{rec.get('error', '')[:80]}",
+                    flush=True,
+                )
+                results.append(rec)
+    else:
+        if not args.arch or not args.cell:
+            p.error("--arch and --cell required (or --all / --lanns)")
+        rec = run_cell(
+            args.arch, args.cell, multi_pod=args.multi_pod, out_dir=args.out,
+            num_micro=args.num_micro, label=args.label,
+        )
+        results.append(rec)
+
+    ok = sum(1 for r in results if r["status"] == "ok")
+    print(f"\n{ok}/{len(results)} cells OK")
+    for r in results:
+        if r["status"] == "ok":
+            mem = r["memory"]
+            la = r.get("cost_loopaware", {})
+            print(
+                f"  {r['arch']:22s} {r['cell']:14s} {r['mesh']:8s} "
+                f"flops/dev={la.get('flops', r['cost']['flops']):.3e} "
+                f"mem(arg/tmp)={mem['argument_bytes']/2**30:.2f}/"
+                f"{mem['temp_bytes']/2**30:.2f} GiB "
+                f"coll={la.get('collective_total_bytes', 0)/2**20:.1f} MiB"
+            )
+        else:
+            print(f"  FAIL {r['arch']} {r['cell']}: {r.get('error')}")
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Re-run the loop-aware HLO cost analysis over saved dry-run artifacts.
+
+The dry-run persists each cell's post-SPMD HLO (gzip); this tool refreshes
+the ``cost_loopaware`` block in the JSON records when the estimator changes —
+no recompilation.
+
+  PYTHONPATH=src python -m repro.launch.reanalyze [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.hlo_cost import analyze
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="results/dryrun")
+    args = p.parse_args(argv)
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        hlo_path = path[: -len(".json")] + ".hlo.gz"
+        if not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            hlo = f.read()
+        la = analyze(hlo)
+        with open(path) as f:
+            rec = json.load(f)
+        rec["cost_loopaware"] = {
+            "flops": la["flops"],
+            "bytes": la["bytes"],
+            "collective_bytes": la["collective_bytes"],
+            "collective_total_bytes": la["collective_total_bytes"],
+        }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        n += 1
+        print(f"reanalyzed {os.path.basename(path)}: "
+              f"flops={la['flops']:.3e} bytes={la['bytes']:.3e} "
+              f"coll={la['collective_total_bytes']:.3e}")
+    print(f"{n} records updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Training driver: ``python -m repro.launch.train --arch smollm-360m ...``.
+
+Single-host (CPU) and mesh runs share this loop: data pipeline -> jit'd
+train step -> checkpoint manager (+ resume), with straggler/step-time stats.
+On CPU the arch's reduced config is the default so the driver is exercisable
+end-to-end in CI; --full uses the published config (needs a real pod).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="smollm-360m")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--num-micro", type=int, default=1)
+    p.add_argument("--full", action="store_true", help="published config")
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args(argv)
+
+    from repro.configs import get_arch
+    from repro.data.pipeline import ShardedBatchIterator
+    from repro.data.synthetic import token_batch
+    from repro.models import transformer as tf
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.optimizer import AdamWConfig, init_state
+    from repro.train.train_step import lm_loss_fn, make_train_step
+
+    arch = get_arch(args.arch)
+    if arch.family != "lm":
+        raise SystemExit("train.py drives LM archs; see examples/ for others")
+    cfg = arch.model_config(reduced=not args.full)
+    print(f"arch={args.arch} params={cfg.num_params():,} "
+          f"(active {cfg.num_active_params():,})")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = tf.init(key, cfg)
+    opt_cfg = AdamWConfig(
+        lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+        total_steps=args.steps,
+    )
+    opt_state = init_state(params)
+    step_fn = jax.jit(
+        make_train_step(lm_loss_fn(cfg), opt_cfg, num_micro=args.num_micro)
+    )
+
+    start_step = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep_last_n=2, async_write=True)
+        if args.resume:
+            restored = mgr.restore_latest({"p": params, "o": opt_state})
+            if restored:
+                start_step, tree, extra = restored
+                params, opt_state = tree["p"], tree["o"]
+                print(f"resumed from step {start_step} (loss {extra.get('loss')})")
+
+    def batch_fn(seed, step):
+        toks, labels = token_batch(args.batch, args.seq, cfg.vocab,
+                                   seed=seed * 1_000_003 + step)
+        return {"tokens": toks, "labels": labels}
+
+    it = ShardedBatchIterator(batch_fn, seed=args.seed, start_step=start_step)
+    times = []
+    loss = float("nan")
+    try:
+        for _ in range(start_step, args.steps):
+            step, batch = next(it)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(
+                params, opt_state,
+                {k: jnp.asarray(v) for k, v in batch.items()},
+            )
+            loss = float(metrics["loss"])
+            times.append(time.perf_counter() - t0)
+            if step % args.log_every == 0:
+                print(
+                    f"step {step:5d} loss {loss:.4f} "
+                    f"lr {float(metrics['lr']):.2e} "
+                    f"gnorm {float(metrics['grad_norm']):.2f} "
+                    f"{np.mean(times[-args.log_every:]) * 1e3:.0f} ms/step",
+                    flush=True,
+                )
+            if mgr and step and step % args.ckpt_every == 0:
+                mgr.save(step, {"p": params, "o": opt_state},
+                         extra={"loss": loss})
+    finally:
+        it.close()
+        if mgr:
+            mgr.wait()
+    print(f"done: final loss {loss:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

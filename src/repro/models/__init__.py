@@ -1,0 +1,1 @@
+"""Assigned-architecture model zoo (pure-pytree functional JAX models)."""

@@ -1,0 +1,318 @@
+"""DimeNet — Directional Message Passing Neural Network (arXiv:2003.03123).
+
+Config (assigned): n_blocks=6, d_hidden=128, n_bilinear=8, n_spherical=7,
+n_radial=6.  Messages live on DIRECTED EDGES m_{ji}; each interaction block
+updates m_{ji} from all incoming messages m_{kj} (k != i) weighted by a
+2D spherical-radial basis of (d_kj, angle(k->j->i)) through a bilinear layer.
+
+Kernel regime (taxonomy §GNN): triplet gather — NOT expressible as SpMM.  We
+precompute the triplet index list (t_src = edge k->j, t_dst = edge j->i) on
+the host (numpy, with an optional per-edge cap for the web-scale graphs) and
+the model does gather -> dense math -> ``jax.ops.segment_sum`` back to edges;
+node aggregation is another segment_sum over edge destinations.  All ragged
+structures are padded to static shapes with -1 sentinels (masked), so the
+whole model jits and shards: edge/triplet tables shard over 'model' (the
+LANNS hash-shard idea applied to edge partitions), node tables replicate.
+
+Bases: radial = sin(n pi d / c)/d (the l=0 spherical Bessel family the paper
+uses), angular = Legendre polynomials P_l(cos theta) (the m=0 spherical
+harmonics up to n_spherical) — both faithful to the reference implementation
+up to normalization constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding_rules import NULL_CTX, ShardingCtx
+from repro.models.layers import _init_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    envelope_p: int = 6
+    n_species: int = 95
+    d_node_feat: int = 0  # >0: continuous node features instead of species
+    out_dim: int = 1
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def num_params(self) -> int:
+        h, nb = self.d_hidden, self.n_bilinear
+        emb = (self.n_species if not self.d_node_feat else self.d_node_feat) * h
+        emb += self.n_radial * h + 3 * h * h
+        per_block = (
+            self.n_radial * h  # rbf -> edge gate
+            + self.n_spherical * self.n_radial * nb  # sbf proj
+            + h * nb * h  # bilinear
+            + 4 * h * h  # msg MLPs
+            + h * self.out_dim
+        )
+        return emb + self.n_blocks * per_block + 2 * h * self.out_dim
+
+
+# ---------------------------------------------------------------------------
+# host-side graph preprocessing (real substrate, not a stub)
+# ---------------------------------------------------------------------------
+
+
+def build_triplets(
+    edge_index: np.ndarray,
+    n_nodes: int,
+    max_in_per_edge: Optional[int] = None,
+    max_triplets: Optional[int] = None,
+    seed: int = 0,
+):
+    """Triplet list for directed edges: pairs (e_kj, e_ji) sharing node j,
+    with k != i.  Returns (t_in, t_out) int32 arrays — t_in indexes the
+    incoming message edge (k->j), t_out the updated edge (j->i).
+
+    Fully vectorized (no python loop over edges).  ``max_in_per_edge`` caps
+    in-degree contributions per outgoing edge (deterministic truncation) and
+    ``max_triplets`` uniformly subsamples the rest — the compute-bounding
+    trick for web-scale graphs, analogous to LANNS capacity-bounded routing.
+    """
+    src = np.asarray(edge_index[0], dtype=np.int64)
+    dst = np.asarray(edge_index[1], dtype=np.int64)
+    valid = (src >= 0) & (dst >= 0)
+    E = src.shape[0]
+    vsrc, vdst = src[valid], dst[valid]
+    vidx = np.nonzero(valid)[0]
+    order_d = np.argsort(vdst, kind="stable")  # valid edges grouped by dst
+    starts = np.searchsorted(vdst[order_d], np.arange(n_nodes + 1))
+    indeg = starts[1:] - starts[:-1]
+    counts = indeg[vsrc]  # per valid edge e=(j->i): in-degree of j
+    if max_in_per_edge is not None:
+        counts = np.minimum(counts, max_in_per_edge)
+    total = int(counts.sum())
+    t_out_v = np.repeat(np.arange(len(vsrc), dtype=np.int64), counts)
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    within = np.arange(total, dtype=np.int64) - offsets[t_out_v]
+    t_in_v = order_d[starts[vsrc[t_out_v]] + within]
+    # drop degenerate triplets where k == i (message bouncing straight back)
+    keep = vsrc[t_in_v] != vdst[t_out_v]
+    t_in_v, t_out_v = t_in_v[keep], t_out_v[keep]
+    if max_triplets is not None and len(t_in_v) > max_triplets:
+        rng = np.random.default_rng(seed)
+        sel = rng.choice(len(t_in_v), max_triplets, replace=False)
+        t_in_v, t_out_v = t_in_v[sel], t_out_v[sel]
+    # map back to original (padded) edge ids
+    return vidx[t_in_v].astype(np.int32), vidx[t_out_v].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# bases
+# ---------------------------------------------------------------------------
+
+
+def envelope(d, cutoff: float, p: int):
+    """Smooth polynomial cutoff envelope u(d) (DimeNet eq. 8)."""
+    x = d / cutoff
+    a = -(p + 1) * (p + 2) / 2.0
+    b = p * (p + 2)
+    c = -p * (p + 1) / 2.0
+    env = 1.0 / jnp.maximum(x, 1e-9) + a * x ** (p - 1) + b * x**p + c * x ** (p + 1)
+    return jnp.where(x < 1.0, env, 0.0)
+
+
+def radial_basis(d, n_radial: int, cutoff: float, p: int):
+    """e_RBF,n(d) = sqrt(2/c) sin(n pi d / c) / d, enveloped.  (E, n_radial)"""
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    dd = jnp.maximum(d[..., None], 1e-9)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * dd / cutoff) / dd
+    return basis * envelope(d, cutoff, p)[..., None]
+
+
+def _legendre(cos_t, l_max: int):
+    """P_0..P_{l_max-1}(cos theta) by recurrence.  (..., l_max)"""
+    p0 = jnp.ones_like(cos_t)
+    if l_max == 1:
+        return p0[..., None]
+    ps = [p0, cos_t]
+    for l in range(2, l_max):
+        ps.append(((2 * l - 1) * cos_t * ps[-1] - (l - 1) * ps[-2]) / l)
+    return jnp.stack(ps, axis=-1)
+
+
+def spherical_basis(d, angle, n_spherical: int, n_radial: int, cutoff: float, p: int):
+    """a_SBF,(l,n)(d, theta): radial sin-basis x Legendre angular.  Returns
+    (T, n_spherical * n_radial)."""
+    rb = radial_basis(d, n_radial, cutoff, p)  # (T, n_radial)
+    ab = _legendre(jnp.cos(angle), n_spherical)  # (T, n_spherical)
+    return (ab[..., :, None] * rb[..., None, :]).reshape(
+        *d.shape, n_spherical * n_radial
+    )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _mlp2_init(key, d_in, d_out, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": _init_dense(k1, (d_in, d_out), dtype),
+        "w2": _init_dense(k2, (d_out, d_out), dtype),
+    }
+
+
+def init(key, cfg: DimeNetConfig):
+    dtype = cfg.dtype()
+    keys = jax.random.split(key, 6 + cfg.n_blocks)
+    h = cfg.d_hidden
+    d_in_node = cfg.d_node_feat if cfg.d_node_feat else cfg.n_species
+    params = {
+        "embed_node": _init_dense(keys[0], (d_in_node, h), dtype, scale=0.02),
+        "embed_rbf": _init_dense(keys[1], (cfg.n_radial, h), dtype),
+        "embed_msg": _mlp2_init(keys[2], 3 * h, dtype=dtype, d_out=h),
+        "out_embed": _mlp2_init(keys[3], h, h, dtype),
+        "out_final": _init_dense(keys[4], (h, cfg.out_dim), dtype),
+    }
+    blocks = []
+    for b in range(cfg.n_blocks):
+        kb = jax.random.split(keys[5 + b], 8)
+        blocks.append(
+            {
+                "rbf_gate": _init_dense(kb[0], (cfg.n_radial, h), dtype),
+                "sbf_proj": _init_dense(
+                    kb[1], (cfg.n_spherical * cfg.n_radial, cfg.n_bilinear), dtype
+                ),
+                "bilinear": (
+                    jax.random.normal(kb[2], (h, cfg.n_bilinear, h)) / np.sqrt(h)
+                ).astype(dtype),
+                "w_src": _init_dense(kb[3], (h, h), dtype),
+                "w_msg": _init_dense(kb[4], (h, h), dtype),
+                "w_update1": _init_dense(kb[5], (h, h), dtype),
+                "w_update2": _init_dense(kb[6], (h, h), dtype),
+                "out_proj": _init_dense(kb[7], (h, h), dtype),
+            }
+        )
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def apply(
+    params,
+    cfg: DimeNetConfig,
+    *,
+    positions,  # (n, 3)
+    edge_index,  # (2, E) int32, -1 padded
+    t_in,  # (T,) int32 triplet incoming edge, -1 padded
+    t_out,  # (T,) int32 triplet outgoing edge, -1 padded
+    z=None,  # (n,) species OR None
+    node_feat=None,  # (n, d_feat) when cfg.d_node_feat
+    node_mask=None,  # (n,) bool
+    ctx: ShardingCtx = NULL_CTX,
+):
+    """Returns (node_out (n, out_dim), graph_out (out_dim,)).
+
+    All index arrays may be -1 padded; contributions are masked to zero.
+    """
+    act = jax.nn.silu
+    n = positions.shape[0]
+    E = edge_index.shape[1]
+    src, dst = edge_index[0], edge_index[1]
+    e_valid = (src >= 0) & (dst >= 0)
+    srcc = jnp.clip(src, 0)
+    dstc = jnp.clip(dst, 0)
+
+    # geometry
+    vec = positions[dstc] - positions[srcc]  # (E, 3)
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(vec**2, axis=-1), 1e-12))
+    rbf = radial_basis(dist, cfg.n_radial, cfg.cutoff, cfg.envelope_p)
+    rbf = jnp.where(e_valid[:, None], rbf, 0.0).astype(positions.dtype)
+
+    t_valid = (t_in >= 0) & (t_out >= 0)
+    ti = jnp.clip(t_in, 0)
+    to = jnp.clip(t_out, 0)
+    # angle at shared node j between edges (k->j) and (j->i)
+    v_in = -vec[ti]  # j -> k
+    v_out = vec[to]  # j -> i
+    cos_a = jnp.sum(v_in * v_out, axis=-1) / (
+        jnp.maximum(jnp.linalg.norm(v_in, axis=-1) * jnp.linalg.norm(v_out, axis=-1), 1e-9)
+    )
+    angle = jnp.arccos(jnp.clip(cos_a, -1.0 + 1e-7, 1.0 - 1e-7))
+    sbf = spherical_basis(
+        dist[ti], angle, cfg.n_spherical, cfg.n_radial, cfg.cutoff, cfg.envelope_p
+    )
+    sbf = jnp.where(t_valid[:, None], sbf, 0.0).astype(positions.dtype)
+
+    # node embedding
+    if cfg.d_node_feat:
+        hN = node_feat @ params["embed_node"]
+    else:
+        hN = params["embed_node"][jnp.clip(z, 0)]
+    if node_mask is not None:
+        hN = jnp.where(node_mask[:, None], hN, 0.0)
+
+    # initial edge message: MLP([h_src, h_dst, rbf_embed])
+    m = jnp.concatenate(
+        [hN[srcc], hN[dstc], rbf @ params["embed_rbf"]], axis=-1
+    )
+    m = act(m @ params["embed_msg"]["w1"])
+    m = act(m @ params["embed_msg"]["w2"])  # (E, h)
+    m = jnp.where(e_valid[:, None], m, 0.0)
+    m = ctx.constrain(m, "batch", None)
+
+    node_out = jnp.zeros((n, cfg.d_hidden), m.dtype)
+
+    def block(carry, bp):
+        m, node_out = carry
+        # directional message passing (eq. 9): bilinear(sbf, m_kj) agg to e_ji
+        gate = rbf @ bp["rbf_gate"]  # (E, h)
+        m_gated = act(m @ bp["w_msg"]) * gate
+        m_in = m_gated[ti]  # (T, h) gather incoming messages
+        sb = sbf @ bp["sbf_proj"]  # (T, n_bilinear)
+        # bilinear as a sum over the (small) bilinear axis — an einsum over
+        # "th,hbk,tb->tk" materializes a (T, n_bilinear, h) intermediate
+        # (4 GiB/block at 1M triplets); the unrolled form peaks at (T, h).
+        h_dim = m_in.shape[-1]
+        inter = jnp.zeros((m_in.shape[0], h_dim), m_in.dtype)
+        for b in range(bp["bilinear"].shape[-2]):
+            inter = inter + (m_in @ bp["bilinear"][:, b, :]) * sb[:, b:b + 1]
+        inter = jnp.where(t_valid[:, None], inter, 0.0)
+        agg = jax.ops.segment_sum(inter, to, num_segments=E)  # (E, h)
+        mm = act(m @ bp["w_src"]) + agg
+        mm = act(mm @ bp["w_update1"])
+        m_new = m + act(mm @ bp["w_update2"])  # residual
+        m_new = jnp.where(e_valid[:, None], m_new, 0.0)
+        m_new = ctx.constrain(m_new, "batch", None)
+        # per-block output: aggregate messages to destination nodes
+        contrib = jax.ops.segment_sum(
+            m_new * gate, dstc, num_segments=n
+        ) @ bp["out_proj"]
+        return (m_new, node_out + contrib), None
+
+    block_fn = jax.checkpoint(
+        block, policy=jax.checkpoint_policies.nothing_saveable, prevent_cse=False
+    )
+    (m, node_out), _ = jax.lax.scan(block_fn, (m, node_out), params["blocks"])
+
+    h = act(node_out @ params["out_embed"]["w1"])
+    h = act(h @ params["out_embed"]["w2"])
+    node_pred = h @ params["out_final"]
+    if node_mask is not None:
+        node_pred = jnp.where(node_mask[:, None], node_pred, 0.0)
+    graph_pred = jnp.sum(node_pred, axis=0)
+    return node_pred, graph_pred

@@ -1,0 +1,469 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA, MLA, SwiGLU, chunked attn.
+
+Functional style: every layer is (init_fn -> params pytree, apply_fn).  Params
+are plain dicts so they stack cleanly for scan-over-layers (models/
+transformer.py) and shard with simple PartitionSpec rules (distributed/
+sharding_rules.py).  Compute dtype and parameter dtype are decoupled; norms
+and softmax always run in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init_dense(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rms_norm(params, x, eps: float = 1e-6):
+    """RMSNorm with f32 statistics but NO full-size f32 convert of x.
+
+    A plain ``x.astype(f32)`` creates a convert node that jax.checkpoint
+    considers free-to-save; under scan-over-layers that made the backward
+    save an f32 copy of the whole (L, B, S, d) carry stack (+10 GiB on
+    qwen2-72b train_4k).  The einsum accumulates the sum of squares in f32
+    without materializing an f32 copy of x.
+    """
+    d = x.shape[-1]
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(ss / d + eps)[..., None].astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x (..., S, H, hd); positions (..., S) int32.  Rotates pairs (even, odd)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, with optional QKV bias — Qwen style)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    q_chunk: int = 0  # 0 = unchunked; >0 enables flash-style chunked attn
+    kv_chunk: int = 1024
+
+
+def attention_init(key, cfg: AttentionConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": _init_dense(ks[0], (d, H * hd), dtype),
+        "wk": _init_dense(ks[1], (d, KV * hd), dtype),
+        "wv": _init_dense(ks[2], (d, KV * hd), dtype),
+        "wo": _init_dense(ks[3], (H * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _repeat_kv(x, n_rep: int):
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd) by head repetition (GQA)."""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd)).reshape(
+        b, s, kv * n_rep, hd
+    )
+
+
+def _causal_mask(sq: int, skv: int, q_offset):
+    """Additive causal mask (sq, skv): q position i attends kv <= i+offset."""
+    qi = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 0) + q_offset
+    kj = jax.lax.broadcasted_iota(jnp.int32, (sq, skv), 1)
+    return jnp.where(kj <= qi, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def dot_attention(q, k, v, *, causal: bool, q_offset=0, scale=None):
+    """q (B, Sq, H, hd), k/v (B, Skv, H, hd) -> (B, Sq, H, hd).  f32 softmax."""
+    hd = q.shape[-1]
+    scale = scale or (1.0 / np.sqrt(hd))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        logits = logits + _causal_mask(q.shape[1], k.shape[1], q_offset)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int,
+                      scale=None):
+    """Flash-style exact attention: scan over kv chunks with an online
+    softmax (running max / normalizer), scanned over q chunks.  Memory is
+    O(q_chunk * kv_chunk) instead of O(Sq * Skv) — mandatory for the 32k
+    prefill cells (32k^2 scores would be 4 GB/head).  Matches dot_attention
+    to float tolerance.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    hd_v = v.shape[-1]  # MLA: v head dim can differ from qk head dim
+    scale = scale or (1.0 / np.sqrt(hd))
+    nq = -(-Sq // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    q_pad, kv_pad = nq * q_chunk - Sq, nk * kv_chunk - Skv
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    qs = qp.reshape(B, nq, q_chunk, H, hd)
+    ks = kp.reshape(B, nk, kv_chunk, H, hd)
+    vs = vp.reshape(B, nk, kv_chunk, H, hd_v)
+
+    def q_step(_, qc_idx):
+        qi, qc = qc_idx
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kc_idx):
+            m, l, acc = carry
+            ki, kc, vc = kc_idx
+            kv_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc).astype(jnp.float32) * scale
+            valid = kv_pos[None, :] < Skv
+            if causal:
+                valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(valid[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(valid[None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, jnp.moveaxis(out, 1, 2)  # (B, q_chunk, H, hd)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (jnp.arange(nq), jnp.moveaxis(qs, 1, 0))
+    )  # (nq, B, q_chunk, H, hd_v)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, hd_v)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def attention_apply(
+    params,
+    cfg: AttentionConfig,
+    x,
+    *,
+    positions,
+    causal: bool = True,
+    kv_cache: Optional[dict] = None,
+    cache_offset=None,
+):
+    """GQA attention.  x (B, S, d).
+
+    kv_cache: {"k": (B, S_max, KV, hd), "v": ...} — when provided, new k/v are
+    written at cache_offset and attention runs against the full cache
+    (decode / incremental prefill).  Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        off = cache_offset if cache_offset is not None else 0
+        if hasattr(off, "ndim") and off.ndim == 1:  # per-row offsets (slots)
+            rows = jnp.arange(B)[:, None]
+            cols = off[:, None] + jnp.arange(S)[None, :]
+            ck = kv_cache["k"].at[rows, cols].set(k.astype(kv_cache["k"].dtype))
+            cv = kv_cache["v"].at[rows, cols].set(v.astype(kv_cache["v"].dtype))
+            q_pos = off[:, None] + jnp.arange(S)[None, :]  # (B, S)
+            full_prefill = False
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, off, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, off, 0, 0)
+            )
+            q_pos = jnp.broadcast_to(off + jnp.arange(S)[None, :], (B, S))
+            # whole-sequence prefill: nothing precedes these tokens, so
+            # attention over the fresh k/v is exact — take the (chunked)
+            # cacheless path instead of scoring the padded cache (which
+            # materialized a (B, H, S, S_max) f32 buffer: 34 GiB at 32k).
+            full_prefill = isinstance(off, int) and off == 0 and S > 1
+        new_cache = {"k": ck, "v": cv}
+        if full_prefill:
+            k_full = _repeat_kv(k, H // KV)
+            v_full = _repeat_kv(v, H // KV)
+            if cfg.q_chunk and S > cfg.q_chunk:
+                out = chunked_attention(
+                    q, k_full, v_full, causal=causal,
+                    q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                )
+            else:
+                out = dot_attention(q, k_full, v_full, causal=causal)
+            out = out.reshape(B, S, H * hd) @ params["wo"]
+            return out, new_cache
+        S_kv = ck.shape[1]
+        kv_pos = jnp.arange(S_kv)
+        # valid cache extent + causality, per row: kv <= q position
+        ok = kv_pos[None, None, :] <= q_pos[:, :, None]  # (B, S, S_kv)
+        if not causal:
+            ok = kv_pos[None, None, :] <= q_pos[:, -1:, None]
+        # grouped einsum: never materialize the repeated KV (decode at
+        # kv=8 -> 64 heads would copy 4 GiB/layer otherwise)
+        G = H // KV
+        qg = q.reshape(B, S, KV, G, hd)
+        logits = jnp.einsum(
+            "bskgd,btkd->bkgst", qg, ck.astype(x.dtype)
+        ).astype(jnp.float32) / np.sqrt(hd)
+        logits = jnp.where(ok[:, None, None], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, cv.astype(x.dtype))
+        out = out.reshape(B, S, H, hd)
+    else:
+        k_full = _repeat_kv(k, H // KV)
+        v_full = _repeat_kv(v, H // KV)
+        if cfg.q_chunk and S > cfg.q_chunk:
+            out = chunked_attention(
+                q, k_full, v_full, causal=causal,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            )
+        else:
+            out = dot_attention(q, k_full, v_full, causal=causal)
+    out = out.reshape(B, S, H * hd) @ params["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10_000.0
+    q_chunk: int = 0
+    kv_chunk: int = 1024
+
+    @property
+    def qk_head_dim(self):
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        # queries: full-rank projection (V2-Lite has no q compression)
+        "wq": _init_dense(ks[0], (d, H * cfg.qk_head_dim), dtype),
+        # compressed KV path: d -> latent + shared rope key
+        "w_dkv": _init_dense(ks[1], (d, cfg.kv_lora_rank), dtype),
+        "w_krope": _init_dense(ks[2], (d, cfg.qk_rope_head_dim), dtype),
+        "kv_norm": rms_norm_init(cfg.kv_lora_rank, dtype),
+        # up-projections from the latent
+        "w_uk": _init_dense(ks[3], (cfg.kv_lora_rank, H * cfg.qk_nope_head_dim), dtype),
+        "w_uv": _init_dense(ks[4], (cfg.kv_lora_rank, H * cfg.v_head_dim), dtype),
+        "wo": _init_dense(ks[5], (H * cfg.v_head_dim, d), dtype),
+    }
+
+
+def mla_apply(
+    params,
+    cfg: MLAConfig,
+    x,
+    *,
+    positions,
+    causal: bool = True,
+    latent_cache: Optional[dict] = None,
+    cache_offset=None,
+):
+    """MLA attention.  Cache stores ONLY (latent (B, S, r), k_rope (B, S, dr))
+    — 576 dims/token for V2-Lite vs 2 * 16 * 128 = 4096 for the GQA
+    equivalent: the 7x KV-byte reduction that makes the long-decode cells
+    memory-feasible (see EXPERIMENTS.md §Roofline).
+
+    Decode uses the absorbed form: q_nope is folded through W_uk so scores are
+    taken directly against the latent; W_uv output is folded through wo.  This
+    never materializes per-head K/V for the whole cache.
+    """
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = (
+        cfg.qk_nope_head_dim,
+        cfg.qk_rope_head_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    q = (x @ params["wq"]).reshape(B, S, H, cfg.qk_head_dim)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent = rms_norm(params["kv_norm"], x @ params["w_dkv"])  # (B, S, r)
+    k_rope = apply_rope(
+        (x @ params["w_krope"]).reshape(B, S, 1, dr), positions, cfg.rope_theta
+    )  # (B, S, 1, dr) — shared across heads
+
+    scale = 1.0 / np.sqrt(cfg.qk_head_dim)
+
+    if latent_cache is not None:
+        off = cache_offset if cache_offset is not None else 0
+        if hasattr(off, "ndim") and off.ndim == 1:  # per-row offsets (slots)
+            rows = jnp.arange(B)[:, None]
+            cols = off[:, None] + jnp.arange(S)[None, :]
+            cl = latent_cache["latent"].at[rows, cols].set(
+                latent.astype(latent_cache["latent"].dtype)
+            )
+            cr = latent_cache["k_rope"].at[rows, cols].set(
+                k_rope[:, :, 0].astype(latent_cache["k_rope"].dtype)
+            )
+            q_pos = off[:, None] + jnp.arange(S)[None, :]  # (B, S)
+        else:
+            cl = jax.lax.dynamic_update_slice(
+                latent_cache["latent"],
+                latent.astype(latent_cache["latent"].dtype), (0, off, 0),
+            )
+            cr = jax.lax.dynamic_update_slice(
+                latent_cache["k_rope"],
+                k_rope[:, :, 0].astype(latent_cache["k_rope"].dtype),
+                (0, off, 0),
+            )
+            q_pos = jnp.broadcast_to(off + jnp.arange(S)[None, :], (B, S))
+        new_cache = {"latent": cl, "k_rope": cr}
+        if isinstance(off, int) and off == 0 and S > 1:
+            # whole-sequence prefill: exact over the fresh latent; use the
+            # materialized (chunked) path and just persist the cache.
+            k_nope = (latent @ params["w_uk"]).reshape(B, S, H, dn)
+            v = (latent @ params["w_uv"]).reshape(B, S, H, dv)
+            k_rope_b = jnp.broadcast_to(k_rope, (B, S, H, dr))
+            qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+            kh = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+            if cfg.q_chunk and S > cfg.q_chunk:
+                out = chunked_attention(
+                    qh, kh, v, causal=causal, q_chunk=cfg.q_chunk,
+                    kv_chunk=cfg.kv_chunk, scale=scale,
+                )
+            else:
+                out = dot_attention(qh, kh, v, causal=causal, scale=scale)
+            out = out.reshape(B, S, H * dv) @ params["wo"]
+            return out, new_cache
+        S_kv = cl.shape[1]
+        # absorbed scores: q_nope' = q_nope @ W_uk  (per head: dn x r)
+        w_uk = params["w_uk"].reshape(r, H, dn)
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # (B, S, H, r)
+        s_lat = jnp.einsum("bshr,btr->bhst", q_lat, cl.astype(x.dtype))
+        s_rope = jnp.einsum("bshd,btd->bhst", q_rope, cr.astype(x.dtype))
+        logits = (s_lat + s_rope).astype(jnp.float32) * scale
+        kv_pos = jnp.arange(S_kv)
+        ok = kv_pos[None, None, :] <= q_pos[:, :, None]  # (B, S, S_kv)
+        if not causal:
+            ok = kv_pos[None, None, :] <= q_pos[:, -1:, None]
+        logits = jnp.where(ok[:, None], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        # absorbed values: out_latent = probs @ latent; then through W_uv
+        out_lat = jnp.einsum("bhst,btr->bshr", probs, cl.astype(x.dtype))
+        w_uv = params["w_uv"].reshape(r, H, dv)
+        out = jnp.einsum("bshr,rhd->bshd", out_lat, w_uv)  # (B, S, H, dv)
+        out = out.reshape(B, S, H * dv) @ params["wo"]
+        return out, new_cache
+
+    # train / prefill: materialize per-head K, V from the latent
+    k_nope = (latent @ params["w_uk"]).reshape(B, S, H, dn)
+    v = (latent @ params["w_uv"]).reshape(B, S, H, dv)
+    k_rope_b = jnp.broadcast_to(k_rope, (B, S, H, dr))
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kh = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    if cfg.q_chunk and S > cfg.q_chunk:
+        out = chunked_attention(
+            qh, kh, v, causal=causal, q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk, scale=scale,
+        )
+    else:
+        out = dot_attention(qh, kh, v, causal=causal, scale=scale)
+    out = out.reshape(B, S, H * dv) @ params["wo"]
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _init_dense(ks[0], (d_model, d_ff), dtype),
+        "w_up": _init_dense(ks[1], (d_model, d_ff), dtype),
+        "w_down": _init_dense(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(params, x):
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]

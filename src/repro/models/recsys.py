@@ -1,0 +1,470 @@
+"""RecSys architectures: AutoInt, DIN, SASRec, xDeepFM.
+
+The shared substrate is the **embedding layer over huge sparse tables** —
+JAX has no nn.EmbeddingBag, so we build it: ``jnp.take`` over row-sharded
+tables + ``jax.ops.segment_sum`` for multi-hot bags.  Tables are row-hash-
+sharded over the 'model' mesh axis — this IS the LANNS level-1 sharding
+applied to embedding tables (DESIGN.md §7): lookup fans out to every shard
+and partial rows psum back (GSPMD inserts the collective from the specs).
+
+  AutoInt  (arXiv:1810.11921): field embeddings -> 3 residual self-attention
+           layers (2 heads, d=32) -> concat -> logit.
+  DIN      (arXiv:1706.06978): target attention over user behaviour history
+           with the [h, t, h-t, h*t] MLP scorer -> 200-80 MLP.
+  SASRec   (arXiv:1808.09781): causal 2-block transformer over the item
+           sequence; next-item logits = hidden @ item_embeddings^T (the
+           retrieval_cand cell scores 1M candidates with the LANNS kernel).
+  xDeepFM  (arXiv:1803.05170): CIN (outer-product feature maps compressed by
+           1x1 conv, 200-200-200) + deep MLP (400-400) + linear.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding_rules import NULL_CTX, ShardingCtx
+from repro.models.layers import _init_dense
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+
+def embedding_table_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return _init_dense(key, (vocab, dim), dtype, scale=0.01)
+
+
+def embedding_lookup(table, ids, ctx: ShardingCtx = NULL_CTX):
+    """Single-hot lookup: ids (...,) -> (..., dim).  Row-sharded table."""
+    out = jnp.take(table, jnp.clip(ids, 0), axis=0)
+    return jnp.where((ids >= 0)[..., None], out, 0.0)
+
+
+def embedding_bag(table, ids, segment_ids, num_segments: int, mode: str = "sum"):
+    """EmbeddingBag: gather rows then segment-reduce.
+
+    ids (nnz,) row indices (-1 = padding), segment_ids (nnz,) output bag per
+    id, -> (num_segments, dim).  mode in {'sum', 'mean'}.
+    """
+    rows = jnp.take(table, jnp.clip(ids, 0), axis=0)
+    valid = (ids >= 0).astype(rows.dtype)[:, None]
+    rows = rows * valid
+    seg = jnp.where(ids >= 0, segment_ids, num_segments)  # drop padding
+    out = jax.ops.segment_sum(rows, seg, num_segments=num_segments + 1)[:num_segments]
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(valid[:, 0], seg, num_segments=num_segments + 1)[
+            :num_segments
+        ]
+        out = out / jnp.maximum(cnt[:, None], 1.0)
+    return out
+
+
+def field_offsets(vocab_sizes) -> np.ndarray:
+    """Per-field row offsets into the fused table (static, config-derived —
+    NOT a parameter, so grads stay all-float)."""
+    return np.concatenate([[0], np.cumsum(vocab_sizes)[:-1]]).astype(np.int32)
+
+
+def multi_field_lookup(
+    tables, sparse_ids, vocab_sizes, ctx: ShardingCtx = NULL_CTX
+):
+    """Per-field single-hot lookup: sparse_ids (B, F) against a single fused
+    table (sum_vocab, dim) with per-field row offsets — one big gather instead
+    of F small ones (the TPU-friendly layout; FBGEMM TBE does the same).
+
+    tables: {"table": (total_rows, dim)}
+    """
+    offs = jnp.asarray(field_offsets(vocab_sizes))
+    flat = sparse_ids + offs[None, :]
+    out = jnp.take(tables["table"], jnp.clip(flat, 0), axis=0)  # (B, F, dim)
+    return jnp.where((sparse_ids >= 0)[..., None], out, 0.0)
+
+
+def fused_tables_init(key, vocab_sizes, dim: int, dtype=jnp.float32):
+    # rows padded to a multiple of 256 so the table row-shards evenly over
+    # any production mesh axis combination (the pad rows are dead weight of
+    # < 0.001% — same trick as padded vocab in LM heads).
+    total = int(np.sum(vocab_sizes))
+    total_pad = -(-total // 512) * 512
+    return {"table": embedding_table_init(key, total_pad, dim, dtype)}
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {"w": _init_dense(ks[i], (dims[i], dims[i + 1]), dtype),
+         "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _mlp_apply(layers, x, act=jax.nn.relu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# AutoInt
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    vocab_sizes: tuple = ()
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def num_params(self):
+        emb = int(np.sum(self.vocab_sizes)) * self.embed_dim
+        d_in = self.embed_dim
+        per = 3 * d_in * self.d_attn * self.n_heads + d_in * self.d_attn * self.n_heads
+        # layer 0 maps embed_dim; later layers map d_attn*n_heads
+        dh = self.d_attn * self.n_heads
+        per_rest = 3 * dh * dh + dh * dh
+        return emb + per + (self.n_attn_layers - 1) * per_rest + self.n_sparse * dh
+
+
+def autoint_init(key, cfg: AutoIntConfig):
+    dtype = cfg.dtype()
+    keys = jax.random.split(key, 2 + cfg.n_attn_layers)
+    params = {"tables": fused_tables_init(keys[0], cfg.vocab_sizes, cfg.embed_dim, dtype)}
+    d = cfg.embed_dim
+    dh = cfg.d_attn * cfg.n_heads
+    layers = []
+    for i in range(cfg.n_attn_layers):
+        kk = jax.random.split(keys[1 + i], 4)
+        d_in = d if i == 0 else dh
+        layers.append(
+            {
+                "wq": _init_dense(kk[0], (d_in, dh), dtype),
+                "wk": _init_dense(kk[1], (d_in, dh), dtype),
+                "wv": _init_dense(kk[2], (d_in, dh), dtype),
+                "w_res": _init_dense(kk[3], (d_in, dh), dtype),
+            }
+        )
+    params["attn_layers"] = layers
+    params["head"] = _init_dense(keys[-1], (cfg.n_sparse * dh, 1), dtype)
+    return params
+
+
+def autoint_apply(params, cfg: AutoIntConfig, sparse_ids, ctx: ShardingCtx = NULL_CTX):
+    """sparse_ids (B, F) -> logits (B,)."""
+    x = multi_field_lookup(params["tables"], sparse_ids, cfg.vocab_sizes, ctx)  # (B, F, d)
+    x = ctx.constrain(x, "batch", None, None)
+    H, da = cfg.n_heads, cfg.d_attn
+    for lp in params["attn_layers"]:
+        B, F, _ = x.shape
+        q = (x @ lp["wq"]).reshape(B, F, H, da)
+        k = (x @ lp["wk"]).reshape(B, F, H, da)
+        v = (x @ lp["wv"]).reshape(B, F, H, da)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k).astype(jnp.float32) / np.sqrt(da)
+        p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhfg,bghd->bfhd", p, v).reshape(B, F, H * da)
+        x = jax.nn.relu(o + x @ lp["w_res"])
+    B = x.shape[0]
+    return (x.reshape(B, -1) @ params["head"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIN
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_mlp: tuple = (80, 40)
+    mlp: tuple = (200, 80)
+    n_items: int = 1_000_000
+    n_context: int = 8  # additional context/profile fields
+    context_vocab: int = 100_000
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def num_params(self):
+        d = self.embed_dim
+        emb = self.n_items * d + self.n_context * self.context_vocab * d
+        att_in = 4 * d
+        att = att_in * self.attn_mlp[0] + self.attn_mlp[0] * self.attn_mlp[1] + self.attn_mlp[1]
+        mlp_in = d * 2 + self.n_context * d
+        mlp = mlp_in * self.mlp[0] + self.mlp[0] * self.mlp[1] + self.mlp[1]
+        return emb + att + mlp
+
+
+def din_init(key, cfg: DINConfig):
+    dtype = cfg.dtype()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.embed_dim
+    return {
+        "item_table": embedding_table_init(k1, cfg.n_items, d, dtype),
+        "ctx_tables": fused_tables_init(
+            k2, [cfg.context_vocab] * cfg.n_context, d, dtype
+        ),
+        "att_mlp": _mlp_init(k3, (4 * d,) + cfg.attn_mlp + (1,), dtype),
+        "mlp": _mlp_init(k4, (2 * d + cfg.n_context * d,) + cfg.mlp + (1,), dtype),
+    }
+
+
+def din_apply(
+    params, cfg: DINConfig, *, history, hist_len, target_item, context_ids,
+    ctx: ShardingCtx = NULL_CTX,
+):
+    """history (B, T) item ids; target_item (B,); context_ids (B, n_context).
+    -> logits (B,).  Target attention: a(h, t) = MLP([h, t, h-t, h*t])."""
+    h = embedding_lookup(params["item_table"], history, ctx)  # (B, T, d)
+    t = embedding_lookup(params["item_table"], target_item, ctx)  # (B, d)
+    h = ctx.constrain(h, "batch", None, None)
+    tb = jnp.broadcast_to(t[:, None, :], h.shape)
+    feats = jnp.concatenate([h, tb, h - tb, h * tb], axis=-1)
+    scores = _mlp_apply(params["att_mlp"], feats, act=jax.nn.sigmoid)[..., 0]
+    T = h.shape[1]
+    mask = jnp.arange(T)[None, :] < hist_len[:, None]
+    scores = jnp.where(mask, scores.astype(jnp.float32), -jnp.inf)
+    # DIN uses un-normalized sigmoid weights in the paper; we keep softmax
+    # masking for numerical sanity but scale by hist length (sum-pool like).
+    w = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    user = jnp.einsum("bt,btd->bd", w, h)
+    c = multi_field_lookup(
+        params["ctx_tables"], context_ids, [cfg.context_vocab] * cfg.n_context, ctx
+    )  # (B, C, d)
+    B = user.shape[0]
+    feat = jnp.concatenate([user, t, c.reshape(B, -1)], axis=-1)
+    return _mlp_apply(params["mlp"], feat)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# SASRec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    name: str = "sasrec"
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    n_items: int = 2_000_000
+    dropout: float = 0.0
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def num_params(self):
+        d = self.embed_dim
+        emb = self.n_items * d + self.seq_len * d
+        per = 4 * d * d + 2 * d * d + 4 * d  # attn + pointwise ffn + norms
+        return emb + self.n_blocks * per
+
+
+def sasrec_init(key, cfg: SASRecConfig):
+    dtype = cfg.dtype()
+    keys = jax.random.split(key, 2 + cfg.n_blocks)
+    d = cfg.embed_dim
+    params = {
+        "item_table": embedding_table_init(keys[0], cfg.n_items, d, dtype),
+        "pos_table": embedding_table_init(keys[1], cfg.seq_len, d, dtype),
+        "blocks": [],
+    }
+    blocks = []
+    for b in range(cfg.n_blocks):
+        kk = jax.random.split(keys[2 + b], 6)
+        blocks.append(
+            {
+                "wq": _init_dense(kk[0], (d, d), dtype),
+                "wk": _init_dense(kk[1], (d, d), dtype),
+                "wv": _init_dense(kk[2], (d, d), dtype),
+                "wo": _init_dense(kk[3], (d, d), dtype),
+                "ff1": _init_dense(kk[4], (d, d), dtype),
+                "ff2": _init_dense(kk[5], (d, d), dtype),
+                "ln1": jnp.ones((d,), dtype),
+                "ln2": jnp.ones((d,), dtype),
+            }
+        )
+    params["blocks"] = blocks
+    return params
+
+
+def _ln(x, scale):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-6) * scale).astype(x.dtype)
+
+
+def sasrec_encode(params, cfg: SASRecConfig, item_seq, ctx: ShardingCtx = NULL_CTX):
+    """item_seq (B, T) -> hidden (B, T, d).  Causal self-attention."""
+    B, T = item_seq.shape
+    x = embedding_lookup(params["item_table"], item_seq, ctx)
+    x = x * np.sqrt(cfg.embed_dim) + params["pos_table"][jnp.arange(T)][None]
+    x = ctx.constrain(x, "batch", None, None)
+    H = cfg.n_heads
+    d = cfg.embed_dim
+    dh = d // H
+    causal = jnp.where(
+        jnp.arange(T)[None, :] <= jnp.arange(T)[:, None], 0.0, -jnp.inf
+    ).astype(jnp.float32)
+    pad = (item_seq >= 0)
+    for bp in params["blocks"]:
+        h = _ln(x, bp["ln1"])
+        q = (h @ bp["wq"]).reshape(B, T, H, dh)
+        k = (h @ bp["wk"]).reshape(B, T, H, dh)
+        v = (h @ bp["wv"]).reshape(B, T, H, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(dh)
+        s = s + causal[None, None]
+        s = jnp.where(pad[:, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p).astype(x.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B, T, d)
+        x = x + o @ bp["wo"]
+        h = _ln(x, bp["ln2"])
+        x = x + jax.nn.relu(h @ bp["ff1"]) @ bp["ff2"]
+    return jnp.where(pad[..., None], x, 0.0)
+
+
+def sasrec_apply(params, cfg: SASRecConfig, item_seq, ctx: ShardingCtx = NULL_CTX):
+    """Full-vocab forward: logits over the item vocab for every position.
+    (B, T, n_items) — ONLY for small-vocab evaluation; training at 10M items
+    uses ``sasrec_sampled_logits`` (full logits would be B*T*10M)."""
+    hidden = sasrec_encode(params, cfg, item_seq, ctx)
+    logits = hidden @ params["item_table"].T
+    return ctx.constrain(logits, "batch", None, "vocab")
+
+
+def sasrec_sampled_logits(
+    params, cfg: SASRecConfig, item_seq, pos_items, neg_items,
+    ctx: ShardingCtx = NULL_CTX,
+):
+    """SASRec's actual training objective (paper eq. 6): BCE on the positive
+    next item vs one sampled negative per position.  Returns
+    (pos_scores (B, T), neg_scores (B, T))."""
+    hidden = sasrec_encode(params, cfg, item_seq, ctx)
+    pe = embedding_lookup(params["item_table"], pos_items, ctx)
+    ne = embedding_lookup(params["item_table"], neg_items, ctx)
+    pos = jnp.sum(hidden * pe, axis=-1)
+    neg = jnp.sum(hidden * ne, axis=-1)
+    return pos, neg
+
+
+def sasrec_score_candidates(
+    params, cfg: SASRecConfig, item_seq, candidates, ctx: ShardingCtx = NULL_CTX
+):
+    """Serving: score (B?, n_cand) candidate items against the final hidden
+    state — the retrieval_cand cell (batched dot, not a loop; for the 1M-
+    candidate cell this routes through the LANNS distance kernel)."""
+    hidden = sasrec_encode(params, cfg, item_seq, ctx)
+    last = hidden[:, -1]  # (B, d)
+    cand = embedding_lookup(params["item_table"], candidates, ctx)  # (C, d) or (B, C, d)
+    if cand.ndim == 2:
+        return last @ cand.T
+    return jnp.einsum("bd,bcd->bc", last, cand)
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp: tuple = (400, 400)
+    vocab_sizes: tuple = ()
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def num_params(self):
+        emb = int(np.sum(self.vocab_sizes)) * self.embed_dim
+        lin = int(np.sum(self.vocab_sizes))
+        cin, hk_prev = 0, self.n_sparse
+        for hk in self.cin_layers:
+            cin += hk_prev * self.n_sparse * hk
+            hk_prev = hk
+        cin_out = sum(self.cin_layers)
+        d_mlp_in = self.n_sparse * self.embed_dim
+        mlp = 0
+        dims = (d_mlp_in,) + self.mlp + (1,)
+        for i in range(len(dims) - 1):
+            mlp += dims[i] * dims[i + 1] + dims[i + 1]
+        return emb + lin + cin + cin_out + mlp
+
+
+def xdeepfm_init(key, cfg: XDeepFMConfig):
+    dtype = cfg.dtype()
+    keys = jax.random.split(key, 4 + len(cfg.cin_layers))
+    params = {
+        "tables": fused_tables_init(keys[0], cfg.vocab_sizes, cfg.embed_dim, dtype),
+        "linear": fused_tables_init(keys[1], cfg.vocab_sizes, 1, dtype),
+        "mlp": _mlp_init(
+            keys[2], (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp + (1,), dtype
+        ),
+        "cin_head": _init_dense(keys[3], (sum(cfg.cin_layers), 1), dtype),
+    }
+    cin = []
+    hk_prev = cfg.n_sparse
+    for li, hk in enumerate(cfg.cin_layers):
+        cin.append(
+            _init_dense(keys[4 + li], (hk_prev * cfg.n_sparse, hk), dtype)
+        )
+        hk_prev = hk
+    params["cin"] = cin
+    return params
+
+
+def xdeepfm_apply(params, cfg: XDeepFMConfig, sparse_ids, ctx: ShardingCtx = NULL_CTX):
+    """sparse_ids (B, F) -> logits (B,).
+
+    CIN layer k: X^k_{h} = sum_{i,j} W^k_{h,i,j} (X^{k-1}_i * X^0_j) computed
+    as an outer product over feature maps contracted against the compress
+    weights — einsum form, no explicit (B, H_{k-1}*F, D) materialization."""
+    x0 = multi_field_lookup(params["tables"], sparse_ids, cfg.vocab_sizes, ctx)  # (B, F, D)
+    x0 = ctx.constrain(x0, "batch", None, None)
+    B, F, D = x0.shape
+    # linear term
+    lin = multi_field_lookup(params["linear"], sparse_ids, cfg.vocab_sizes, ctx)  # (B, F, 1)
+    logit = lin.sum(axis=(1, 2))
+    # CIN
+    xk = x0
+    cin_outs = []
+    for w in params["cin"]:
+        hk_prev = xk.shape[1]
+        inter = jnp.einsum("bhd,bfd->bhfd", xk, x0)  # (B, Hk-1, F, D)
+        xk = jnp.einsum(
+            "bhfd,hfk->bkd", inter, w.reshape(hk_prev, F, -1)
+        )  # (B, Hk, D)
+        cin_outs.append(xk.sum(-1))  # sum pool over D
+    logit = logit + (jnp.concatenate(cin_outs, axis=-1) @ params["cin_head"])[:, 0]
+    # deep MLP
+    logit = logit + _mlp_apply(params["mlp"], x0.reshape(B, -1))[:, 0]
+    return logit

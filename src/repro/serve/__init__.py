@@ -1,0 +1,1 @@
+"""Online serving substrate: LANNS retrieval on the mesh, KV-cache decode."""

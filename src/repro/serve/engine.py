@@ -1,0 +1,158 @@
+"""LM serving engine: prefill + decode with a continuous-batching host loop.
+
+``ServeEngine`` owns the jitted prefill/decode steps (shape-bucketed) and a
+slot-based batch: requests occupy fixed cache slots, finished requests free
+their slot for the next queued request (continuous batching a la Orca/vLLM,
+reduced to the static-shape form that XLA wants: the decode step always runs
+the full (slots, 1) batch, with inactive slots masked).
+
+serve_step (what the dry-run lowers for decode cells) = one decode step for
+the full slot batch against the full KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding_rules import NULL_CTX, ShardingCtx
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    tokens_out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def make_prefill_fn(cfg: tf.TransformerConfig, ctx: ShardingCtx = NULL_CTX):
+    """(params, tokens (B, S), cache) -> (next_token_logits (B, V), cache)."""
+
+    def prefill(params, tokens, cache):
+        logits, cache, _ = tf.apply(
+            params, cfg, tokens, cache=cache, cache_offset=0, ctx=ctx
+        )
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_fn(cfg: tf.TransformerConfig, ctx: ShardingCtx = NULL_CTX):
+    """(params, token (B, 1), cache, offset) -> (logits (B, V), cache).
+
+    One new token against a KV cache of length ``offset`` — the paper-kind
+    serve_step for decode_32k / long_500k cells.
+    """
+
+    def decode(params, token, cache, offset):
+        logits, cache, _ = tf.apply(
+            params, cfg, token, cache=cache, cache_offset=offset, ctx=ctx
+        )
+        return logits[:, -1], cache
+
+    return decode
+
+
+class ServeEngine:
+    """Host-side continuous batching over fixed cache slots."""
+
+    def __init__(
+        self,
+        cfg: tf.TransformerConfig,
+        params,
+        *,
+        slots: int = 8,
+        max_seq: int = 512,
+        cache_dtype=jnp.float32,
+        ctx: ShardingCtx = NULL_CTX,
+        greedy: bool = True,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = tf.make_cache(cfg, slots, max_seq, dtype=cache_dtype)
+        self.offsets = np.zeros(slots, dtype=np.int64)  # per-slot position
+        self.active: list[Optional[Request]] = [None] * slots
+        self.queue: list[Request] = []
+        self.greedy = greedy
+        self.rng = np.random.default_rng(seed)
+        self._prefill = jax.jit(make_prefill_fn(cfg, ctx))
+        self._decode = jax.jit(make_decode_fn(cfg, ctx))
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "completed": 0}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                # per-slot prefill: batch of 1 into this slot's cache rows
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                slot_cache = jax.tree.map(lambda c: c[:, s: s + 1], self.cache)
+                logits, slot_cache = self._prefill(self.params, toks, slot_cache)
+                self.cache = jax.tree.map(
+                    lambda full, sl: full.at[:, s: s + 1].set(sl),
+                    self.cache, slot_cache,
+                )
+                self.offsets[s] = len(req.prompt)
+                tok = self._sample(np.asarray(logits)[0])
+                req.tokens_out.append(int(tok))
+                self.stats["prefill_tokens"] += len(req.prompt)
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.greedy:
+            return int(np.argmax(logits))
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def step(self):
+        """One engine tick: admit waiting requests, decode all active slots."""
+        self._admit()
+        if not any(self.active):
+            return False
+        last = np.zeros((self.slots, 1), dtype=np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None and req.tokens_out:
+                last[s, 0] = req.tokens_out[-1]
+        # per-slot offsets: slots decode at their own cache positions
+        offset = jnp.asarray(self.offsets, jnp.int32)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(last), self.cache, offset
+        )
+        logits = np.asarray(logits)
+        self.stats["decode_steps"] += 1
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.offsets[s] += 1
+            tok = self._sample(logits[s])
+            req.tokens_out.append(tok)
+            if (
+                len(req.tokens_out) >= req.max_new_tokens
+                or self.offsets[s] >= self.max_seq - 1
+            ):
+                req.done = True
+                self.stats["completed"] += 1
+                self.active[s] = None
+                self.offsets[s] = 0
+        return True
+
+    def run(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.stats

@@ -1,0 +1,10 @@
+"""Test config.  NOTE: no XLA_FLAGS here — smoke tests must see ONE CPU
+device (the dry-run sets its own 512-device flag in its own process)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

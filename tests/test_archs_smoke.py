@@ -1,0 +1,48 @@
+"""Per-architecture smoke tests: reduced config, one forward + train steps on
+CPU, asserting output shapes, finiteness, and that the loss moves."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke(arch_id):
+    metrics = get_arch(arch_id).smoke()
+    assert all(
+        v == v and abs(v) < 1e9 for v in metrics.values()
+    ), metrics  # finite
+
+
+def test_all_archs_have_cells():
+    for arch_id in ARCH_IDS:
+        arch = get_arch(arch_id)
+        assert len(arch.cells) == 4, arch_id
+        assert arch.family in ("lm", "gnn", "recsys")
+
+
+def test_lm_param_counts_match_published():
+    """num_params() should land near the published sizes (the exact configs
+    are the point of the exercise)."""
+    import numpy as np
+
+    expected = {
+        "codeqwen1.5-7b": 7.3e9,
+        "qwen2-72b": 72.7e9,
+        "smollm-360m": 0.36e9,
+        "deepseek-moe-16b": 16.4e9,
+        "deepseek-v2-lite-16b": 15.7e9,
+    }
+    for arch_id, want in expected.items():
+        cfg = get_arch(arch_id).model_config()
+        got = cfg.num_params()
+        assert abs(got - want) / want < 0.15, (arch_id, got, want)
+
+
+def test_moe_active_params():
+    cfg = get_arch("deepseek-moe-16b").model_config()
+    active = cfg.num_active_params()
+    total = cfg.num_params()
+    # DeepSeekMoE-16B: ~2.8B activated of ~16B
+    assert 1.5e9 < active < 4e9, active
+    assert active < total / 4

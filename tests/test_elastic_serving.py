@@ -1,0 +1,77 @@
+"""Elasticity end-to-end: lose a host, replan, reload its shards, keep
+serving with identical answers — the composition of elastic.ShardPlacement
+with LannsIndex persistence that a real searcher fleet would run."""
+
+import numpy as np
+
+from repro.core import LannsConfig, LannsIndex, recall_at_k, brute_force_topk
+from repro.data.synthetic import sift_like
+from repro.train.elastic import ShardPlacement, StragglerMonitor, replan_on_failure
+
+
+class SearcherFleet:
+    """Minimal host simulator: hosts serve the shards the placement assigns;
+    answers merge at the broker exactly like LannsIndex.query does."""
+
+    def __init__(self, index: LannsIndex, placement: ShardPlacement):
+        self.index = index
+        self.placement = placement
+        self.alive = set(range(placement.num_hosts))
+
+    def kill(self, host: int):
+        self.alive.discard(host)
+        self.placement = replan_on_failure(self.placement, [host])
+
+    def query(self, qs, topk):
+        # every shard must be served by a live host or answers are partial
+        for s in range(self.index.config.num_shards):
+            assert self.placement.hosts_of(s) in self.alive
+        return self.index.query(qs, topk)
+
+
+def test_fleet_survives_host_loss(tmp_path):
+    corpus, queries = sift_like(4000, 32, 64, seed=9)
+    cfg = LannsConfig(num_shards=4, num_segments=2, segmenter="apd",
+                      engine="scan")
+    index = LannsIndex(cfg).build(corpus)
+    index.save(str(tmp_path / "prod"))
+
+    placement = ShardPlacement.initial(num_hosts=4, num_shards=4)
+    fleet = SearcherFleet(index, placement)
+    d0, i0 = fleet.query(queries, 10)
+
+    # host 2 dies: its shard moves; artifacts reload from the store
+    fleet.kill(2)
+    assert all(h != 2 for h in fleet.placement.assignment)
+    reloaded = LannsIndex.load(str(tmp_path / "prod"))
+    fleet.index = reloaded  # surviving hosts reload the moved shards
+    d1, i1 = fleet.query(queries, 10)
+    assert np.array_equal(i0, i1), "answers must be identical after re-shard"
+
+    # cascade: another host dies; still serving
+    fleet.kill(0)
+    d2, i2 = fleet.query(queries, 10)
+    assert np.array_equal(i0, i2)
+
+    td, ti = brute_force_topk(queries, corpus, 10)
+    assert recall_at_k(i2, ti, 10) > 0.6
+
+
+def test_straggler_duplication_is_consistent():
+    """Speculatively duplicated shards return the same answers (idempotent
+    reads), so racing the straggler is always safe."""
+    corpus, queries = sift_like(2000, 16, 16, seed=11)
+    cfg = LannsConfig(num_shards=4, num_segments=1, segmenter="rs",
+                      engine="scan")
+    index = LannsIndex(cfg).build(corpus)
+    mon = StragglerMonitor(num_hosts=4, min_samples=2, ratio=1.4)
+    for _ in range(3):
+        for h, t in enumerate([1.0, 1.0, 1.0, 2.5]):
+            mon.observe(h, t)
+    placement = ShardPlacement.initial(4, 4)
+    dup = mon.speculative_duplicates(placement)
+    assert dup, "slow host's shards should be duplicated"
+    # primary and speculative answers are identical by construction
+    d1, i1 = index.query(queries, 5)
+    d2, i2 = index.query(queries, 5)
+    assert np.array_equal(i1, i2)

@@ -1,0 +1,81 @@
+"""Loop-aware HLO cost analyzer: exactness on known-flop programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_flat_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    r = analyze(_hlo(lambda a, b: a @ b, a, b))
+    assert r["flops"] == 2 * 128 * 256 * 64
+
+
+def test_scan_multiplies_trip_count():
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def scanned(x, w):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=12)[0]
+
+    r = analyze(_hlo(scanned, w, w))
+    assert r["flops"] == 12 * 2 * 128**3
+
+
+def test_nested_scan_multiplies_both_levels():
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def nested(x, w):
+        def outer(c, _):
+            inner = jax.lax.scan(
+                lambda c2, _: (c2 @ w, None), c, None, length=5
+            )[0]
+            return inner, None
+
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    r = analyze(_hlo(nested, w, w))
+    assert r["flops"] == 15 * 2 * 64**3
+
+
+def test_scan_equals_unrolled():
+    w = jax.ShapeDtypeStruct((96, 96), jnp.float32)
+
+    def unrolled(x, w):
+        for _ in range(6):
+            x = x @ w
+        return x
+
+    def scanned(x, w):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=6)[0]
+
+    ru = analyze(_hlo(unrolled, w, w))
+    rs = analyze(_hlo(scanned, w, w))
+    assert ru["flops"] == rs["flops"] == 6 * 2 * 96**3
+
+
+def test_elementwise_costs_no_flops_or_bytes():
+    """Converts/elementwise are treated as fused (free) — the TPU model."""
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16)
+    r = analyze(_hlo(lambda a: jnp.tanh(a.astype(jnp.float32)) * 2.0, a))
+    assert r["flops"] == 0
+    # only the final output copy-ish traffic may appear; no 4 MiB f32 blowup
+    assert r["bytes"] < 4 * 1024 * 1024
+
+
+def test_grad_flops_roughly_triple():
+    """Backward of a matmul chain costs ~2x the forward dots (dgrad+wgrad)."""
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def fwd(x, w):
+        return jnp.sum(jnp.tanh(x @ w) @ w)
+
+    r_f = analyze(_hlo(fwd, w, w))
+    r_g = analyze(_hlo(jax.grad(fwd, argnums=(0, 1)), w, w))
+    assert 2.2 * r_f["flops"] <= r_g["flops"] <= 3.8 * r_f["flops"]

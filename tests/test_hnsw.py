@@ -1,0 +1,87 @@
+"""HNSW: build/search correctness, numpy/JAX parity, freeze round-trip."""
+
+import numpy as np
+import pytest
+
+from repro.core import HNSWConfig, HNSWIndex, brute_force_topk, recall_at_k
+from repro.data.synthetic import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    data = clustered_vectors(3000, 24, n_clusters=40, seed=1)
+    idx = HNSWIndex(HNSWConfig(M=8, ef_construction=80, ef_search=80), 24)
+    idx.add_batch(data)
+    return idx, data
+
+
+def test_recall_vs_brute_force(small_index):
+    idx, data = small_index
+    qs = clustered_vectors(64, 24, n_clusters=40, seed=2)
+    td, ti = brute_force_topk(qs, data, 10)
+    d, i = idx.search_np(qs, 10)
+    assert recall_at_k(i, ti, 10) > 0.9
+
+
+def test_jax_search_matches_numpy(small_index):
+    idx, data = small_index
+    qs = clustered_vectors(32, 24, n_clusters=40, seed=3)
+    d_np, i_np = idx.search_np(qs, 5)
+    d_j, i_j = idx.freeze().search(qs, 5)
+    # identical beams modulo tie-breaks: compare distances
+    assert np.allclose(np.sort(d_np, 1), np.sort(d_j, 1), rtol=1e-4, atol=1e-4)
+    same = (i_np == i_j).mean()
+    assert same > 0.95
+
+
+def test_distances_sorted_and_unique(small_index):
+    idx, data = small_index
+    qs = clustered_vectors(16, 24, n_clusters=40, seed=4)
+    d, i = idx.freeze().search(qs, 8)
+    assert np.all(np.diff(d, axis=1) >= -1e-6), "distances must be ascending"
+    for row in i:
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid), "ids must be unique"
+
+
+def test_true_squared_distances(small_index):
+    idx, data = small_index
+    qs = clustered_vectors(8, 24, n_clusters=40, seed=5)
+    d, i = idx.search_np(qs, 3)
+    for qi in range(len(qs)):
+        for c in range(3):
+            if i[qi, c] >= 0:
+                ref = np.sum((qs[qi] - data[i[qi, c]]) ** 2)
+                assert abs(ref - d[qi, c]) < 1e-2 * max(ref, 1.0)
+
+
+def test_ip_metric():
+    data = clustered_vectors(1000, 16, n_clusters=10, seed=6)
+    idx = HNSWIndex(HNSWConfig(M=8, ef_construction=60, metric="ip"), 16)
+    idx.add_batch(data)
+    qs = clustered_vectors(16, 16, n_clusters=10, seed=7)
+    d, i = idx.search_np(qs, 5)
+    td, ti = brute_force_topk(qs, data, 5, metric="ip")
+    assert recall_at_k(i, ti, 5) > 0.85
+
+
+def test_keys_remap():
+    data = clustered_vectors(500, 8, seed=8)
+    keys = np.arange(500) * 7 + 3
+    idx = HNSWIndex(HNSWConfig(M=8, ef_construction=50), 8)
+    idx.add_batch(data, keys)
+    d, i = idx.search_np(data[:4], 1)
+    assert np.array_equal(i[:, 0], keys[:4])  # self is its own NN
+
+
+def test_incremental_add():
+    d1 = clustered_vectors(400, 8, seed=9)
+    d2 = clustered_vectors(400, 8, seed=10)
+    idx = HNSWIndex(HNSWConfig(M=8, ef_construction=50), 8)
+    idx.add_batch(d1)
+    idx.add_batch(d2)
+    assert idx.size == 800
+    data = np.concatenate([d1, d2])
+    qs = data[::97]
+    d, i = idx.search_np(qs, 1)
+    assert (i[:, 0] == np.arange(0, 800, 97)).mean() > 0.9

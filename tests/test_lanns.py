@@ -1,0 +1,160 @@
+"""End-to-end LannsIndex: recall vs brute force, persistence, resume, spill."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LannsConfig,
+    LannsIndex,
+    brute_force_topk,
+    recall_at_k,
+    recall_table,
+)
+from repro.data.synthetic import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    data = clustered_vectors(6000, 24, n_clusters=64, seed=0)
+    queries = clustered_vectors(100, 24, n_clusters=64, seed=1)
+    truth = brute_force_topk(queries, data, 20)
+    return data, queries, truth
+
+
+@pytest.mark.parametrize("segmenter", ["rs", "rh", "apd"])
+def test_recall_bands(corpus, segmenter):
+    """Paper Table 1 qualitative ordering at small scale: RS ~ APD > RH,
+    all within a bounded drop of brute force."""
+    data, queries, (td, ti) = corpus
+    cfg = LannsConfig(
+        num_shards=1, num_segments=8, segmenter=segmenter, engine="scan",
+        alpha=0.15,
+    )
+    idx = LannsIndex(cfg).build(data)
+    d, i = idx.query(queries, 20)
+    r = recall_at_k(i, ti, 10)
+    floor = {"rs": 0.95, "rh": 0.55, "apd": 0.7}[segmenter]
+    assert r > floor, (segmenter, r)
+
+
+def test_rs_exact_with_full_pstk(corpus):
+    """RS + scan engine + perShardTopK disabled == exact brute force."""
+    data, queries, (td, ti) = corpus
+    cfg = LannsConfig(num_shards=2, num_segments=2, segmenter="rs",
+                      engine="scan", topk_confidence=0.999999)
+    idx = LannsIndex(cfg).build(data)
+    d, i = idx.query(queries, 10)
+    assert recall_at_k(i, ti, 10) > 0.999
+
+
+def test_hnsw_engine(corpus):
+    data, queries, (td, ti) = corpus
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                      engine="hnsw", hnsw_m=8, ef_construction=60,
+                      ef_search=60)
+    idx = LannsIndex(cfg).build(data)
+    d, i = idx.query(queries, 10)
+    assert recall_at_k(i, ti, 10) > 0.6
+
+
+def test_physical_vs_virtual_spill(corpus):
+    """Table 7: physical spill stores more points, similar recall."""
+    data, queries, (td, ti) = corpus
+    rv, rp, dup = {}, {}, {}
+    for spill in ("virtual", "physical"):
+        cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                          spill=spill, engine="scan")
+        idx = LannsIndex(cfg).build(data)
+        d, i = idx.query(queries, 20)
+        rv[spill] = recall_at_k(i, ti, 15)
+        dup[spill] = idx.build_stats["duplication_factor"]
+    assert dup["physical"] > 1.05 > dup["virtual"] == 1.0
+    assert abs(rv["physical"] - rv["virtual"]) < 0.1
+
+
+def test_partition_sizes_balanced(corpus):
+    data, _, _ = corpus
+    cfg = LannsConfig(num_shards=2, num_segments=4, segmenter="rh", engine="scan")
+    idx = LannsIndex(cfg).build(data)
+    sizes = np.array(idx.build_stats["partition_sizes"])
+    assert sizes.sum() == len(data)
+    assert sizes.max() < 3 * max(sizes.min(), 1)
+
+
+def test_save_load_roundtrip(tmp_path, corpus):
+    data, queries, _ = corpus
+    cfg = LannsConfig(num_shards=2, num_segments=2, segmenter="rh",
+                      engine="hnsw", hnsw_m=8, ef_construction=40)
+    idx = LannsIndex(cfg).build(data[:2000])
+    d1, i1 = idx.query(queries, 5)
+    idx.save(str(tmp_path / "idx"))
+    idx2 = LannsIndex.load(str(tmp_path / "idx"))
+    d2, i2 = idx2.query(queries, 5)
+    assert np.array_equal(i1, i2)
+    assert np.allclose(d1, d2, rtol=1e-6)
+
+
+def test_resumable_build(tmp_path, corpus):
+    """Fault tolerance: kill the build midway, restart, finish — partitions
+    already persisted are not rebuilt (paper §5.3.1 adapted)."""
+    data, queries, _ = corpus
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="rh", engine="scan")
+    rdir = str(tmp_path / "resume")
+
+    idx = LannsIndex(cfg)
+    idx.fit(data[:2000])
+    assignment = idx.partitioner.assign(data[:2000], np.arange(2000))
+    # simulate a partial build: persist only segments 0 and 1
+    from repro.core.lanns import _build_one_partition
+
+    for g in (0, 1):
+        rows = assignment.rows[0][g]
+        s, gg, payload, _ = _build_one_partition(
+            (0, g, data[rows], np.arange(2000)[rows], "scan", cfg.hnsw_config())
+        )
+        idx._save_partition(rdir, s, gg, payload)
+
+    idx2 = LannsIndex(cfg)
+    idx2.fit(data[:2000])
+    idx2.build(data[:2000], resume_dir=rdir)
+    assert len(idx2.partitions) == 4
+    # query works after resume
+    d, i = idx2.query(queries, 5)
+    assert (i >= 0).all()
+
+
+def test_query_stats(corpus):
+    data, queries, _ = corpus
+    cfg = LannsConfig(num_shards=2, num_segments=4, segmenter="rh", engine="scan")
+    idx = LannsIndex(cfg).build(data)
+    _, _, stats = idx.query(queries, 10, return_stats=True)
+    assert 1.0 <= stats["mean_segments_visited"] <= 4.0
+    assert stats["per_shard_topk"] <= 10
+
+
+def test_mips_metric_beats_raw_ip_routing():
+    """Beyond-paper: the augmented-vector MIPS->L2 reduction routes far
+    better than raw inner-product (which ignores the norm component)."""
+    from repro.data.synthetic import clustered_vectors
+
+    rng = np.random.default_rng(1)
+    items = clustered_vectors(4000, 24, n_clusters=48, seed=0,
+                              spectrum_decay=1.0)
+    items = items * rng.uniform(0.5, 2.0, (4000, 1)).astype(np.float32)
+    qs = clustered_vectors(100, 24, n_clusters=48, seed=2, center_seed=0,
+                           spectrum_decay=1.0)
+    td, ti = brute_force_topk(qs, items, 20, metric="ip")
+    recalls = {}
+    for metric in ("ip", "mips"):
+        cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                          engine="scan", metric=metric)
+        d, i = LannsIndex(cfg).build(items).query(qs, 20)
+        recalls[metric] = recall_at_k(i, ti, 20)
+        if metric == "mips":
+            # converted distances must equal -<q, x> exactly
+            fin = np.isfinite(d) & (i >= 0)
+            ips = np.einsum("bd,bkd->bk", qs, items[np.clip(i, 0, None)])
+            assert np.abs(d[fin] + ips[fin]).max() < 1e-4
+    assert recalls["mips"] > recalls["ip"] + 0.1, recalls

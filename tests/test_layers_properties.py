@@ -1,0 +1,66 @@
+"""Property tests for the transformer primitives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (
+    apply_rope, chunked_attention, dot_attention, rms_norm, rms_norm_init,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6).map(lambda e: 2**e))
+def test_rope_preserves_norms(seed, hd):
+    """Rotations are orthogonal: per-pair (and total) norms are invariant."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 8, 2, hd)).astype(np.float32))
+    pos = jnp.arange(8)
+    y = apply_rope(x, pos)
+    assert np.allclose(
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j (the point of RoPE)."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 64)).astype(np.float32))
+
+    def score(i, j):
+        qi = apply_rope(q, jnp.array([i]))
+        kj = apply_rope(k, jnp.array([j]))
+        return float(jnp.sum(qi * kj))
+
+    assert abs(score(3, 1) - score(10, 8)) < 1e-4
+    assert abs(score(5, 5) - score(0, 0)) < 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rms_norm_unit_rms(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((4, 32)).astype(np.float32) * 7)
+    p = rms_norm_init(32)
+    y = np.asarray(rms_norm(p, x))
+    rms = np.sqrt((y**2).mean(axis=-1))
+    assert np.allclose(rms, 1.0, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([16, 48, 96]),
+       st.sampled_from([16, 32]))
+def test_chunked_attention_exactness(seed, S, chunk):
+    """Online-softmax chunking is EXACT for any chunking of any length."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, S, 2, 16)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, S, 2, 16)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, S, 2, 16)).astype(np.float32))
+    ref = dot_attention(q, k, v, causal=True)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=chunk, kv_chunk=chunk)
+    assert np.allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,107 @@
+"""Segmenter invariants (paper §4.3), including hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SegmenterConfig, make_segmenter, expected_spill_fraction
+from repro.core.segmenter import failure_probability
+from repro.data.synthetic import clustered_vectors
+
+
+def _fit(kind, m, alpha=0.15, spill="virtual", n=4000, d=16, seed=0):
+    data = clustered_vectors(n, d, n_clusters=32, seed=seed)
+    seg = make_segmenter(
+        SegmenterConfig(kind=kind, num_segments=m, alpha=alpha, spill=spill,
+                        seed=seed)
+    ).fit(data)
+    return seg, data
+
+
+@pytest.mark.parametrize("kind", ["rs", "rh", "apd"])
+@pytest.mark.parametrize("m", [2, 4, 8])
+def test_every_point_routed_exactly_once_virtual(kind, m):
+    seg, data = _fit(kind, m)
+    mask = seg.route_points(data)
+    assert mask.shape == (len(data), m)
+    assert np.all(mask.sum(axis=1) == 1), "virtual spill: one segment per point"
+
+
+@pytest.mark.parametrize("kind", ["rh", "apd"])
+def test_physical_spill_duplicates_points(kind):
+    seg, data = _fit(kind, 4, spill="physical")
+    mask = seg.route_points(data)
+    counts = mask.sum(axis=1)
+    assert np.all(counts >= 1)
+    dup_frac = (counts > 1).mean()
+    # alpha=0.15 => ~30% band per level; 2 levels compound
+    assert 0.15 < dup_frac < 0.8
+
+
+@pytest.mark.parametrize("kind", ["rh", "apd"])
+def test_query_spill_fraction_matches_alpha(kind):
+    seg, data = _fit(kind, 2, alpha=0.15)
+    q = clustered_vectors(5000, 16, n_clusters=32, seed=99)
+    mask = seg.route_queries(q)
+    frac_both = (mask.sum(axis=1) > 1).mean()
+    # one level: P(band) ~ 2*alpha = 0.3 on in-distribution queries
+    assert 0.1 < frac_both < 0.55
+
+
+def test_rs_queries_go_everywhere():
+    seg, data = _fit("rs", 8)
+    q = data[:100]
+    assert np.all(seg.route_queries(q))
+
+
+def test_balanced_split_rh():
+    seg, data = _fit("rh", 8)
+    mask = seg.route_points(data)
+    sizes = mask.sum(axis=0)
+    assert sizes.max() < 2.0 * sizes.min() + 10  # median splits ~balance
+
+
+def test_apd_direction_is_informative():
+    """APD should split along a high-variance direction: the projections'
+    variance should exceed the average coordinate variance."""
+    seg, data = _fit("apd", 2)
+    h = seg.hyperplanes[0]
+    proj_var = np.var(data @ h)
+    mean_var = np.var(data, axis=0).mean()
+    assert proj_var > mean_var
+
+
+def test_segment_assignment_deterministic():
+    seg1, data = _fit("rh", 4, seed=5)
+    seg2, _ = _fit("rh", 4, seed=5)
+    assert np.array_equal(seg1.route_points(data), seg2.route_points(data))
+
+
+def test_expected_spill_fraction_formula():
+    assert expected_spill_fraction(0.15, 1) == pytest.approx(0.3)
+    assert expected_spill_fraction(0.15, 3) == pytest.approx(1 - 0.7**3)
+
+
+def test_failure_probability_monotone():
+    p = failure_probability(np.arange(1, 9), alpha=0.15, n=10_000)
+    assert np.all(np.diff(p) > 0), "more levels => more failure (Fig. 4)"
+    assert p[-1] < 0.01  # paper's plotted range is small
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=3),
+    st.floats(min_value=0.05, max_value=0.3),
+)
+def test_property_virtual_routing_covers_median_route(levels, alpha):
+    """Property: the no-spill (median) route of any query is always included
+    in its spill route set — spill only ADDS segments."""
+    m = 2**levels
+    data = clustered_vectors(1000, 8, n_clusters=16, seed=3)
+    seg = make_segmenter(
+        SegmenterConfig(kind="rh", num_segments=m, alpha=alpha, seed=1)
+    ).fit(data)
+    q = data[:200]
+    spill_mask = seg._route(q, spill_band=True)
+    median_mask = seg._route(q, spill_band=False)
+    assert np.all(spill_mask | ~median_mask), "median leaf must be in spill set"

@@ -1,0 +1,266 @@
+"""Substrate tests: optimizer, checkpointing, elasticity, sampler, pipeline,
+compression."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import ShardedBatchIterator
+from repro.data.sampler import CSRGraph, sample_neighbors, sample_subgraph
+from repro.data.synthetic import power_law_graph
+from repro.distributed.compression import (
+    dequantize_int8,
+    error_feedback_compress,
+    quantize_int8,
+    topk_sparsify,
+)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import (
+    ShardPlacement,
+    StragglerMonitor,
+    escalation_plan,
+    replan_on_failure,
+)
+from repro.train.optimizer import AdamWConfig, adamw_update, init_state, lr_schedule
+
+
+# -- optimizer ---------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200)
+    state = init_state(params)
+    for _ in range(150):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert np.allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, abs=1e-3)
+
+
+def test_grad_clip_applied():
+    params = {"w": jnp.zeros(4)}
+    cfg = AdamWConfig(lr=0.0, grad_clip=1.0)
+    state = init_state(params)
+    _, _, m = adamw_update(cfg, params, {"w": jnp.full(4, 100.0)}, state)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+
+def _tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(r.standard_normal((4, 5)).astype(np.float32)),
+        "b": {"c": jnp.asarray(r.integers(0, 9, 7).astype(np.int32))},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last_n=2)
+    t = _tree(1)
+    mgr.save(3, t, extra={"loss": 1.5})
+    step, restored, extra = mgr.restore_latest(t)
+    assert step == 3 and extra["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last_n=2)
+    t = _tree(2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree(3)
+    mgr.save(1, t)
+    path = os.path.join(str(tmp_path), "step_0000000001", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.seek(30)
+        f.write(b"\x00\x01\x02\x03")
+    with pytest.raises(IOError, match="integrity"):
+        mgr.restore(1, t)
+
+
+def test_checkpoint_shape_mismatch(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree(4)
+    mgr.save(1, t)
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.zeros(7, jnp.int32)}}
+    with pytest.raises(ValueError, match="shape"):
+        mgr.restore(1, bad)
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    t = _tree(5)
+    mgr.save(1, t)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+# -- elastic -------------------------------------------------------------------
+
+
+def test_replan_minimal_movement():
+    p = ShardPlacement.initial(num_hosts=8, num_shards=32)
+    p2 = replan_on_failure(p, failed_hosts=[3])
+    moved = sum(a != b for a, b in zip(p.assignment, p2.assignment))
+    assert moved == 4  # only shards of host 3
+    assert all(h != 3 for h in p2.assignment)
+    assert p2.generation == 1
+    # balanced: max load 5, min 4
+    load = p2.load()
+    assert load[np.arange(8) != 3].max() <= 5
+
+
+def test_replan_cascading_failures():
+    p = ShardPlacement.initial(num_hosts=4, num_shards=8)
+    p = replan_on_failure(p, [0])
+    p = replan_on_failure(p, [1])
+    assert set(p.assignment) <= {2, 3}
+    with pytest.raises(RuntimeError):
+        replan_on_failure(p, [2, 3])
+
+
+def test_escalation_plan():
+    fb = escalation_plan(data_axis=16, model_axis=16, lost_devices=16)
+    assert fb.data == 8 and fb.model == 16
+    assert fb.per_device_batch_scale == 2.0
+    fb = escalation_plan(16, 16, lost_devices=1)  # one chip kills a TP group
+    assert fb.data == 8
+    assert escalation_plan(2, 16, lost_devices=32) is None
+
+
+def test_straggler_detection_and_duplicates():
+    mon = StragglerMonitor(num_hosts=4, min_samples=3, ratio=1.5)
+    for _ in range(5):
+        for h, t in enumerate([1.0, 1.0, 1.0, 3.0]):
+            mon.observe(h, t)
+    assert mon.stragglers() == [3]
+    p = ShardPlacement.initial(num_hosts=4, num_shards=8)
+    dup = mon.speculative_duplicates(p)
+    assert set(dup.keys()) == set(p.shards_of(3))
+    assert all(v != 3 for v in dup.values())
+
+
+# -- sampler -------------------------------------------------------------------
+
+
+def test_csr_and_neighbor_sampling():
+    g = power_law_graph(200, 2000, seed=0)
+    csr = CSRGraph.from_edge_index(g["edge_index"], 200)
+    assert csr.n_nodes == 200
+    rng = np.random.default_rng(0)
+    nodes = np.array([0, 1, 2, 3])
+    nbrs = sample_neighbors(csr, nodes, 8, rng)
+    assert nbrs.shape == (4, 8)
+    for r, n in zip(nbrs, nodes):
+        deg = csr.degree(np.array([n]))[0]
+        if deg > 0:
+            row_nbrs = csr.indices[csr.indptr[n]: csr.indptr[n + 1]]
+            assert set(r.tolist()) <= set(row_nbrs.tolist())
+        else:
+            assert np.all(r == -1)
+
+
+def test_subgraph_sampling_shapes_and_locality():
+    g = power_law_graph(500, 5000, seed=1)
+    csr = CSRGraph.from_edge_index(g["edge_index"], 500)
+    rng = np.random.default_rng(1)
+    sub = sample_subgraph(
+        csr, np.arange(16), (5, 3), rng=rng, n_max=512, e_max=1024
+    )
+    assert sub["nodes"].shape == (512,)
+    assert sub["edge_index"].shape == (2, 1024)
+    assert sub["seed_mask"][:16].all()
+    ei = sub["edge_index"]
+    valid = ei[0] >= 0
+    assert np.all(ei[:, valid] < 512)
+    # every edge endpoint is a real node of the subgraph
+    assert np.all(sub["nodes"][ei[0][valid]] >= 0)
+
+
+# -- pipeline ------------------------------------------------------------------
+
+
+def test_sharded_batch_iterator_determinism_and_slicing():
+    def batch_fn(seed, step):
+        r = np.random.default_rng(seed * 1000 + step)
+        return {"x": r.standard_normal((8, 3)).astype(np.float32)}
+
+    it0 = ShardedBatchIterator(batch_fn, seed=7, host_index=0, num_hosts=2)
+    it1 = ShardedBatchIterator(batch_fn, seed=7, host_index=1, num_hosts=2)
+    s0, b0 = next(it0)
+    s1, b1 = next(it1)
+    assert s0 == s1 == 0
+    full = batch_fn(7, 0)["x"]
+    assert np.array_equal(b0["x"], full[:4])
+    assert np.array_equal(b1["x"], full[4:])
+    it0.close()
+    it1.close()
+
+
+def test_pipeline_resume_from_step():
+    def batch_fn(seed, step):
+        return {"x": np.full((2, 1), step, dtype=np.float32)}
+
+    it = ShardedBatchIterator(batch_fn, seed=0, start_step=5)
+    s, b = next(it)
+    assert s == 5 and b["x"][0, 0] == 5
+    it.close()
+
+
+# -- compression -----------------------------------------------------------------
+
+
+def test_int8_quantization_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1000) * 3)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - np.asarray(x)).max()
+    assert err <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    res = jnp.zeros(512)
+    total_naive = jnp.zeros(512)
+    total_ef = jnp.zeros(512)
+    for _ in range(50):
+        q, s = quantize_int8(g)
+        total_naive = total_naive + dequantize_int8(q, s)
+        qs, res_tree = error_feedback_compress({"g": g}, {"g": res})
+        res = res_tree["g"]
+        qe, se = qs["g"]
+        total_ef = total_ef + dequantize_int8(qe, se)
+    want = np.asarray(g) * 50
+    err_naive = np.abs(np.asarray(total_naive) - want).max()
+    err_ef = np.abs(np.asarray(total_ef) - want).max()
+    assert err_ef <= err_naive + 1e-5
+
+
+def test_topk_sparsify():
+    x = jnp.asarray([1.0, -5.0, 0.1, 3.0])
+    y, mask = topk_sparsify(x, 0.5)
+    assert np.asarray(mask).sum() == 2
+    assert np.asarray(y)[1] == -5.0 and np.asarray(y)[3] == 3.0
