@@ -7,7 +7,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, ground_truth, sift_like_corpus
-from repro.core import LannsConfig, LannsIndex, SegmenterConfig, make_segmenter
+from repro.core import SegmenterConfig, make_segmenter
 from repro.core.segmenter import failure_probability
 
 

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
 def run():

@@ -6,7 +6,6 @@ the actual recall cost on data (the paper only states the formula)."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, ground_truth, sift_like_corpus, time_call
 from repro.core import LannsConfig, LannsIndex, per_shard_topk, recall_at_k

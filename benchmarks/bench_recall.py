@@ -5,7 +5,6 @@ partitionings, same alpha=0.15, topK=100, R@{1,5,10,15,50,100}."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, ground_truth, sift_like_corpus, time_call
 from repro.core import HNSWConfig, HNSWIndex, LannsConfig, LannsIndex, recall_table

@@ -5,7 +5,6 @@ change the spill trade-off being measured)."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, ground_truth, sift_like_corpus, time_call
 from repro.core import LannsConfig, LannsIndex, recall_at_k

@@ -15,7 +15,6 @@ import time
 import numpy as np
 
 from repro.core import brute_force_topk
-from repro.data.synthetic import clustered_vectors
 
 ROWS = []
 

@@ -6,7 +6,6 @@ dry-run artifacts (keeps the document reproducible from data).
 
 from __future__ import annotations
 
-import json
 
 from benchmarks.roofline import load_records, make_table
 

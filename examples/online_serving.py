@@ -20,7 +20,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core import LannsConfig, LannsIndex
 from repro.models import transformer as tf
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import AnnFrontend, Request, ServeEngine
 
 # ---- A. LM serving with continuous batching ---------------------------------
 arch = get_arch("smollm-360m")
@@ -59,3 +59,15 @@ q_embs = np.asarray(embed(jnp.asarray(q_tokens)))
 d, i = index.query(q_embs, topk=5)
 self_hit = float((i[:, 0] == np.arange(8)).mean())
 print(f"retrieval: self-match@1 = {self_hit:.2f} (expect 1.0)")
+
+# ---- C. the micro-batching front end (single-query arrivals) -----------------
+# production serving coalesces single-query arrivals into one batched query
+# (up to max_batch queries or max_wait_ms of queueing, whichever first)
+frontend = AnnFrontend(index, topk=5, max_batch=4, max_wait_ms=1.0)
+for q in q_embs:
+    frontend.submit(q)
+done = frontend.step() + frontend.flush()
+fe_hit = float(np.mean([r.ids[0] == r.uid for r in done]))
+print(f"frontend: {len(done)} served in {frontend.stats['batches']} "
+      f"micro-batches (mean {frontend.mean_batch_size:.1f}/batch), "
+      f"self-match@1 = {fe_hit:.2f}")

@@ -3,7 +3,6 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
 
 from repro.core import LannsConfig, LannsIndex, brute_force_topk, recall_table
 from repro.data.synthetic import sift_like

@@ -1,5 +1,6 @@
 from repro.common.utils import (
     Timer,
+    next_pow2,
     pad_to,
     pad_axis_to,
     round_up,
@@ -11,6 +12,7 @@ from repro.common.utils import (
 
 __all__ = [
     "Timer",
+    "next_pow2",
     "pad_to",
     "pad_axis_to",
     "round_up",

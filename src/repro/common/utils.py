@@ -51,6 +51,11 @@ def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (and >= 1)."""
+    return 1 << max(n - 1, 1).bit_length() if n & (n - 1) else max(n, 1)
+
+
 def pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
     """Pad axis 0 of ``a`` up to length ``n`` with ``fill``."""
     if a.shape[0] == n:

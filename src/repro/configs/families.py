@@ -14,7 +14,6 @@ moments (production mixed precision); smoke tests run f32 on CPU.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Callable, Optional
 
 import jax
@@ -133,8 +132,6 @@ class LMArch(Arch):
         self.smoke_overrides = smoke_overrides or {}
 
     def model_config(self, reduced: bool = False):
-        from repro.models.transformer import TransformerConfig
-
         if not reduced:
             return self._config
         cfg = self._config

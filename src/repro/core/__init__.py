@@ -8,7 +8,13 @@ perShardTopK-trimmed two-level merging, and exact brute-force ground truth.
 from repro.core.brute_force import brute_force_topk
 from repro.core.hnsw import HNSWConfig, HNSWIndex, FrozenHNSW
 from repro.core.lanns import LannsConfig, LannsIndex
-from repro.core.merge import merge_topk, merge_topk_np, per_shard_topk, two_level_merge_np
+from repro.core.merge import (
+    merge_topk,
+    merge_topk_np,
+    merge_topk_vec,
+    per_shard_topk,
+    two_level_merge_np,
+)
 from repro.core.recall import recall_at_k, recall_table
 from repro.core.segmenter import (
     SegmenterConfig,
@@ -37,6 +43,7 @@ __all__ = [
     "make_segmenter",
     "merge_topk",
     "merge_topk_np",
+    "merge_topk_vec",
     "per_shard_topk",
     "recall_at_k",
     "recall_table",

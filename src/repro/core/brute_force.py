@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.merge import merge_topk_np
+from repro.core.merge import merge_topk_vec
 from repro.kernels import ops
 
 
@@ -53,4 +53,4 @@ def brute_force_topk(
             d, i = np.asarray(d), np.asarray(i, dtype=np.int64)
             part_d[qs:qe, p, :kk] = d
             part_i[qs:qe, p, :kk] = np.where(i >= 0, i + lo, -1)
-    return merge_topk_np(part_d.reshape(B, -1), part_i.reshape(B, -1), k)
+    return merge_topk_vec(part_d.reshape(B, -1), part_i.reshape(B, -1), k)

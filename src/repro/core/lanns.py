@@ -31,9 +31,9 @@ from typing import Optional
 
 import numpy as np
 
-from repro.common.utils import Timer
+from repro.common.utils import Timer, next_pow2
 from repro.core.hnsw import HNSWConfig, HNSWIndex
-from repro.core.merge import merge_topk_np, per_shard_topk
+from repro.core.merge import merge_topk_vec, per_shard_topk
 from repro.core.segmenter import SegmenterConfig
 from repro.core.sharding import TwoLevelPartitioner
 from repro.kernels import ops
@@ -109,6 +109,24 @@ def _build_one_partition(args):
     return s, g, payload, time.perf_counter() - t0
 
 
+def _batched_scan_topk(queries: np.ndarray, vectors: np.ndarray, k: int, metric: str):
+    """One fused distance+top-k call over a routed query batch.
+
+    Goes through ``ops.distance_topk`` (Pallas kernel on TPU, blocked jnp
+    scan elsewhere).  The batch is padded to the next power of two so the
+    executor's per-(shard, segment) calls reuse a bounded set of jit traces
+    instead of retracing for every routed-subset size.
+    """
+    B, D = queries.shape
+    B_pad = next_pow2(B)
+    qp = queries
+    if B_pad != B:
+        qp = np.zeros((B_pad, D), np.float32)
+        qp[:B] = queries
+    d, i = ops.distance_topk(qp, vectors, k, metric)
+    return np.asarray(d)[:B], np.asarray(i)[:B].astype(np.int64)
+
+
 class _Partition:
     """A built (shard, segment) engine."""
 
@@ -150,8 +168,7 @@ class _Partition:
             metric = (
                 "l2" if self.config.metric == "mips" else self.config.metric
             )
-            d, i = ops.distance_topk_np(queries, self.vectors, k_eff, metric)
-            i = i.astype(np.int64)
+            d, i = _batched_scan_topk(queries, self.vectors, k_eff, metric)
             if self.keys is not None:
                 i = np.where(i >= 0, self.keys[np.clip(i, 0, None)], -1)
         if k_eff < k:
@@ -259,41 +276,59 @@ class LannsIndex:
         Every query goes to every shard; within a shard it goes only to the
         segments its virtual-spill routing selects.  Returns (dists, ids)
         shaped (B, topk); optionally per-query routing stats.
+
+        Batched executor: queries are grouped by routed segment, so each
+        (shard, segment) partition runs ONE batched search over exactly its
+        routed queries; candidates land in compact per-route slots (sized by
+        the worst-case route count, not num_segments) and both merge levels
+        run as single vectorized calls over all (query, shard) rows.
         """
         cfg = self.config
         queries = np.asarray(queries, dtype=np.float32)
         if cfg.metric == "mips":
+            if not hasattr(self, "_mips_M2"):
+                raise RuntimeError(
+                    "metric='mips' index has no stored M^2 — build() it, or "
+                    "load() one saved with mips_M2 in its manifest"
+                )
             queries = np.concatenate(
                 [queries, np.zeros((queries.shape[0], 1), np.float32)], axis=1
             )
         B = queries.shape[0]
+        S = cfg.num_shards
         seg_mask = self.partitioner.route_queries(queries)  # (B, m)
-        pstk = per_shard_topk(topk, cfg.num_shards, cfg.topk_confidence)
-        shard_d = np.full((B, cfg.num_shards, pstk), np.inf, np.float32)
-        shard_i = np.full((B, cfg.num_shards, pstk), -1, np.int64)
+        pstk = per_shard_topk(topk, S, cfg.topk_confidence)
         segments_visited = seg_mask.sum(axis=1)
-        for s in range(cfg.num_shards):
-            # within-shard: segment search + local (level-1) merge.
-            cand_d = np.full((B, cfg.num_segments, pstk), np.inf, np.float32)
-            cand_i = np.full((B, cfg.num_segments, pstk), -1, np.int64)
-            for g in range(cfg.num_segments):
-                sel = np.nonzero(seg_mask[:, g])[0]
-                if sel.size == 0:
-                    continue
+        # slot[b, g]: position of segment g among query b's routed segments.
+        slot = np.cumsum(seg_mask, axis=1) - 1
+        max_routes = max(int(segments_visited.max()) if B else 0, 1)
+        cand_d = np.full((B, S, max_routes, pstk), np.inf, np.float32)
+        cand_i = np.full((B, S, max_routes, pstk), -1, np.int64)
+        for g in range(cfg.num_segments):
+            sel = np.nonzero(seg_mask[:, g])[0]
+            if sel.size == 0:
+                continue
+            q_sel = queries[sel]
+            sl = slot[sel, g]
+            for s in range(S):
                 part = self.partitions.get((s, g))
                 if part is None or part.size == 0:
                     continue
                 # the paper propagates the SHARD-level perShardTopK to the
                 # segments (never a per-segment trim) — §5.3.2.
-                d, i = part.search(queries[sel], pstk, ef=ef)
-                cand_d[sel, g] = d
-                cand_i[sel, g] = i
-            shard_d[:, s], shard_i[:, s] = merge_topk_np(
-                cand_d.reshape(B, -1), cand_i.reshape(B, -1), pstk
-            )
+                d, i = part.search(q_sel, pstk, ef=ef)
+                cand_d[sel, s, sl] = d
+                cand_i[sel, s, sl] = i
+        # level-1: segment merge inside each shard, all (query, shard) rows
+        # in one vectorized call.
+        shard_d, shard_i = merge_topk_vec(
+            cand_d.reshape(B * S, max_routes * pstk),
+            cand_i.reshape(B * S, max_routes * pstk),
+            pstk,
+        )
         # level-2: broker merge over shards.
-        out_d, out_i = merge_topk_np(
-            shard_d.reshape(B, -1), shard_i.reshape(B, -1), topk
+        out_d, out_i = merge_topk_vec(
+            shard_d.reshape(B, S * pstk), shard_i.reshape(B, S * pstk), topk
         )
         if cfg.metric == "mips":
             # convert augmented-L2 distances back to (negated) inner products:
@@ -384,6 +419,9 @@ class LannsIndex:
             "build_stats": {
                 k: v for k, v in self.build_stats.items() if k != "per_partition_seconds"
             },
+            # mips needs the corpus max-norm M^2 to convert augmented-L2
+            # distances back to inner products at query time.
+            "mips_M2": getattr(self, "_mips_M2", None),
         }
         with open(os.path.join(root, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=2, default=str)
@@ -400,6 +438,8 @@ class LannsIndex:
             manifest = json.load(f)
         config = LannsConfig(**manifest["config"])
         index = cls(config)
+        if manifest.get("mips_M2") is not None:
+            index._mips_M2 = float(manifest["mips_M2"])
         seg_path = os.path.join(root, "segmenter.npz")
         if os.path.exists(seg_path):
             with np.load(seg_path) as z:

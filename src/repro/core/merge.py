@@ -120,8 +120,61 @@ def merge_topk(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
     return out_d, out_i
 
 
+def merge_topk_vec(dists: np.ndarray, ids: np.ndarray, k: int):
+    """Vectorized NumPy merge — semantics of ``merge_topk_np``, no Python loop.
+
+    dists/ids: (..., C), lower distance is better.  Entries with id < 0 or a
+    non-finite (±inf) distance are dropped; duplicate ids keep their minimum
+    distance; output is sorted ascending by (distance, id) and padded with
+    (+inf, -1).  Parity with ``merge_topk_np`` is property-tested
+    (tests/test_merge_vec.py).
+
+    ids must be integral-VALUED; a float dtype is accepted (and preserved)
+    but fractional ids are undefined behaviour — the reference dedups by
+    int(i) truncation, this path by exact value.
+
+    Two row-wise lexsorts, O(C log C) per row: first group by id (distance as
+    the tie-break so the head of each id-run carries the run minimum), mask
+    the rest of each run, then order the survivors by (distance, id).
+    """
+    *lead, C = dists.shape
+    d2 = dists.reshape(-1, C)
+    i2 = ids.reshape(-1, C)
+    R = d2.shape[0]
+    # invalid ids get a sentinel that sorts after every real id (float id
+    # arrays are legal in the reference, so pick the sentinel by kind)
+    sentinel = (
+        np.iinfo(i2.dtype).max
+        if np.issubdtype(i2.dtype, np.integer) else np.inf
+    )
+    invalid = (i2 < 0) | np.isinf(d2)
+    dk = np.where(invalid, np.inf, d2)
+    ik = np.where(invalid, sentinel, i2)
+    order = np.lexsort((dk, ik), axis=-1)  # by id, then distance
+    sid = np.take_along_axis(ik, order, axis=-1)
+    sd = np.take_along_axis(dk, order, axis=-1)
+    # carry the invalid mask through the sort rather than re-deriving it from
+    # the sentinel: a VALID candidate whose id happens to equal the sentinel
+    # value must survive (it sorts ahead of the invalid run by distance).
+    sinv = np.take_along_axis(invalid, order, axis=-1)
+    dup = np.concatenate(
+        [np.zeros((R, 1), bool), sid[:, 1:] == sid[:, :-1]], axis=1
+    )
+    sd = np.where(dup | sinv, np.inf, sd)
+    order = np.lexsort((sid, sd), axis=-1)  # by distance, then id
+    kk = min(k, C)
+    take = order[:, :kk]
+    out_d = np.full((R, k), np.inf, dtype=dists.dtype)
+    out_i = np.full((R, k), -1, dtype=ids.dtype)
+    out_d[:, :kk] = np.take_along_axis(sd, take, axis=-1)
+    out_i[:, :kk] = np.where(
+        np.isinf(out_d[:, :kk]), -1, np.take_along_axis(sid, take, axis=-1)
+    )
+    return out_d.reshape(*lead, k), out_i.reshape(*lead, k)
+
+
 def merge_topk_np(dists: np.ndarray, ids: np.ndarray, k: int):
-    """Numpy reference of merge_topk (used by the offline path and tests)."""
+    """Python-loop reference of merge_topk (ground truth for parity tests)."""
     *lead, C = dists.shape
     dists2 = dists.reshape(-1, C)
     ids2 = ids.reshape(-1, C)
@@ -163,7 +216,7 @@ def two_level_merge_np(
     for s in range(S):
         d = np.moveaxis(seg_dists[s], 0, -1).reshape(B, m * c)
         i = np.moveaxis(seg_ids[s], 0, -1).reshape(B, m * c)
-        shard_d[s], shard_i[s] = merge_topk_np(d, i, pstk)
+        shard_d[s], shard_i[s] = merge_topk_vec(d, i, pstk)
     d = np.moveaxis(shard_d, 0, -1).reshape(B, S * pstk)
     i = np.moveaxis(shard_i, 0, -1).reshape(B, S * pstk)
-    return merge_topk_np(d, i, topk)
+    return merge_topk_vec(d, i, topk)

@@ -15,7 +15,6 @@ import threading
 from typing import Callable, Iterator, Optional
 
 import jax
-import numpy as np
 
 
 class ShardedBatchIterator:

@@ -18,9 +18,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.common.utils import round_up
+from repro.common.utils import next_pow2, round_up
 from repro.kernels import ref
 from repro.kernels.distance_topk import distance_topk_pallas
 
@@ -29,10 +28,6 @@ LANE = 128
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(n - 1, 1).bit_length() if n & (n - 1) else max(n, 1)
 
 
 def distance_topk(
@@ -72,22 +67,25 @@ def distance_topk(
     else:
         metric_k = metric
 
+    # q/x are already normalized above for 'cos', so the fallbacks must score
+    # with metric_k ('ip') — passing 'cos' through would normalize a second
+    # time inside ref.distance_matrix (redundant work, not a result change).
     if backend == "jnp":
         return ref.distance_topk_blocked(
-            q.astype(jnp.float32), x.astype(jnp.float32), k, metric
+            q.astype(jnp.float32), x.astype(jnp.float32), k, metric_k
         )
 
-    k_pad = max(_next_pow2(k), LANE)
+    k_pad = max(next_pow2(k), LANE)
     if k_pad > 256:
         # the in-kernel buffer tops out at 256; larger k streams through the
         # blocked jnp merge instead (rare: paper's k is 100-200).
         return ref.distance_topk_blocked(
-            q.astype(jnp.float32), x.astype(jnp.float32), k, metric
+            q.astype(jnp.float32), x.astype(jnp.float32), k, metric_k
         )
     # pick block_n so the in-kernel merge length k_pad + block_n is a power
     # of two (bitonic network) and a lane multiple.
     block_n = max(block_n, k_pad)
-    block_n = _next_pow2(k_pad + block_n) - k_pad
+    block_n = next_pow2(k_pad + block_n) - k_pad
 
     D_pad = round_up(D, LANE)
     B_pad = round_up(B, block_q)
@@ -117,9 +115,3 @@ def distance_topk(
 def distance_topk_jit(q, x, k: int, metric: str = "l2"):
     """Pre-jitted jnp path (stable signature for serving loops)."""
     return ref.distance_topk_blocked(q, x, k, metric)
-
-
-def distance_topk_np(q: np.ndarray, x: np.ndarray, k: int, metric: str = "l2"):
-    """Numpy convenience wrapper (offline pipeline)."""
-    d, i = distance_topk(q, x, k, metric, backend="jnp")
-    return np.asarray(d), np.asarray(i)

@@ -226,7 +226,6 @@ def run_lanns_cell(*, multi_pod: bool, out_dir: str, mode: str = "routed",
     """Dry-run the distributed LANNS serve step at paper scale (People:
     180M x 50d).  Corpus ShapeDtypeStructs only — nothing allocated."""
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.core.lanns import LannsConfig
     from repro.launch.mesh import make_production_mesh

@@ -76,6 +76,7 @@ class Instruction:
     op: str
     operands: list
     attrs: str
+    operand_types: list = field(default_factory=list)  # inline types or ""
 
     @property
     def out_bytes(self):
@@ -138,14 +139,24 @@ def parse_hlo(text: str) -> dict:
         m = _INST.match(line)
         if m:
             name, type_str, op, operand_str, attrs = m.groups()
-            operands = [
-                o.strip().lstrip("%")
-                for o in re.split(r",\s*(?![^()\[\]{}]*[)\]}])", operand_str)
-                if o.strip()
-            ]
-            operands = [re.split(r"[\s(]", o)[0] for o in operands]
+            operands, operand_types = [], []
+            for o in re.split(r",\s*(?![^()\[\]{}]*[)\]}])", operand_str):
+                o = o.strip()
+                if not o:
+                    continue
+                # newer XLA prints operand types inline:
+                #   dot(f32[128,256]{1,0} %Arg_0.1, ...)
+                # older prints bare names:  dot(%Arg_0.1, ...)
+                toks = o.split()
+                if len(toks) > 1 and toks[-1].startswith("%"):
+                    operand_types.append(" ".join(toks[:-1]))
+                    name_tok = toks[-1]
+                else:
+                    operand_types.append("")
+                    name_tok = toks[0]
+                operands.append(re.split(r"[\s(]", name_tok.lstrip("%"))[0])
             cur.instructions.append(
-                Instruction(name, type_str, op, operands, attrs)
+                Instruction(name, type_str, op, operands, attrs, operand_types)
             )
     return comps
 
@@ -216,8 +227,17 @@ class HloCost:
         self._cache[comp_name] = total  # break recursion cycles
         symtab = {i.name: i.type_str for i in comp.instructions}
 
-        def op_bytes(o):
-            return _type_bytes(_operand_type(comp, symtab, o))
+        def operand_type(inst, j):
+            """Prefer the inline operand type (newer XLA text); fall back to
+            the computation-local symbol table / params (older XLA)."""
+            t = inst.operand_types[j] if j < len(inst.operand_types) else ""
+            return t or _operand_type(comp, symtab, inst.operands[j])
+
+        def op_bytes_all(inst):
+            return sum(
+                _type_bytes(operand_type(inst, j))
+                for j in range(len(inst.operands))
+            )
 
         for inst in comp.instructions:
             # ---- per-op HBM byte rules (TPU-after-fusion semantics) --------
@@ -231,7 +251,7 @@ class HloCost:
                 for _, dims in out[:1]:
                     for d in dims:
                         out_elems *= d
-                lhs_t = _operand_type(comp, symtab, inst.operands[0])
+                lhs_t = operand_type(inst, 0)
                 cm = _CONTRACT.search(inst.attrs)
                 contract = 1
                 if cm and lhs_t:
@@ -242,9 +262,7 @@ class HloCost:
                             if ax < len(lhs_dims):
                                 contract *= lhs_dims[ax]
                 total["flops"] += 2.0 * out_elems * contract
-                total["bytes"] += inst.out_bytes + sum(
-                    op_bytes(o) for o in inst.operands
-                )
+                total["bytes"] += inst.out_bytes + op_bytes_all(inst)
             elif inst.op == "while":
                 trips = 1
                 tm = _TRIP.search(inst.attrs)
@@ -274,20 +292,18 @@ class HloCost:
                     continue
                 base = next(c for c in COLLECTIVE_OPS if inst.op.startswith(c))
                 total["collective_bytes"][base] += inst.out_bytes
-                total["bytes"] += inst.out_bytes + sum(
-                    op_bytes(o) for o in inst.operands
-                )
+                total["bytes"] += inst.out_bytes + op_bytes_all(inst)
             elif inst.op in ("dynamic-slice", "gather"):
                 total["bytes"] += 2 * inst.out_bytes  # read slice + write
             elif inst.op == "dynamic-update-slice":
                 upd = (
-                    op_bytes(inst.operands[1])
+                    _type_bytes(operand_type(inst, 1))
                     if len(inst.operands) > 1 else inst.out_bytes
                 )
                 total["bytes"] += 3 * upd  # read+write update in place
             elif inst.op == "scatter":
                 upd = (
-                    op_bytes(inst.operands[-1])
+                    _type_bytes(operand_type(inst, len(inst.operands) - 1))
                     if inst.operands else inst.out_bytes
                 )
                 total["bytes"] += 3 * upd
@@ -295,13 +311,9 @@ class HloCost:
                 if m:
                     total["flops"] += self.cost(m.group(1))["flops"]
             elif inst.op in ("reduce", "reduce-window", "sort"):
-                total["bytes"] += inst.out_bytes + sum(
-                    op_bytes(o) for o in inst.operands
-                )
+                total["bytes"] += inst.out_bytes + op_bytes_all(inst)
             elif inst.op == "custom-call":
-                total["bytes"] += inst.out_bytes + sum(
-                    op_bytes(o) for o in inst.operands
-                )
+                total["bytes"] += inst.out_bytes + op_bytes_all(inst)
             elif inst.op in ("copy", "concatenate", "pad", "reverse",
                              "rng", "fft", "transpose"):
                 total["bytes"] += 2 * inst.out_bytes

@@ -10,6 +10,21 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across jax versions.
+
+    ``axis_types`` / ``jax.sharding.AxisType`` only exist on newer jax; older
+    releases (e.g. 0.4.x) default every axis to Auto anyway, so omitting the
+    kwarg there is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(
+        shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+    )
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
 
@@ -18,19 +33,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat_make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 4, *, pod: int = 0):
     """Small mesh for CI-scale dry-run tests (requires forced host devices)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        return compat_make_mesh((pod, data, model), ("pod", "data", "model"))
+    return compat_make_mesh((data, model), ("data", "model"))

@@ -9,7 +9,6 @@ end-to-end in CI; --full uses the published config (needs a real pod).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

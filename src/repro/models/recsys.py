@@ -21,7 +21,6 @@ and partial rows psum back (GSPMD inserts the collective from the specs).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

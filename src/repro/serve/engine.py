@@ -1,4 +1,4 @@
-"""LM serving engine: prefill + decode with a continuous-batching host loop.
+"""Serving engines: LM continuous batching + the ANN micro-batching front end.
 
 ``ServeEngine`` owns the jitted prefill/decode steps (shape-bucketed) and a
 slot-based batch: requests occupy fixed cache slots, finished requests free
@@ -8,13 +8,18 @@ the full (slots, 1) batch, with inactive slots masked).
 
 serve_step (what the dry-run lowers for decode cells) = one decode step for
 the full slot batch against the full KV cache.
+
+``AnnFrontend`` is the LANNS §7 online-serving front end: single-query
+arrivals are micro-batched (up to ``max_batch`` queries or ``max_wait_ms``
+of queueing, whichever first) and executed through the same batched
+``LannsIndex.query`` executor the offline benchmarks measure.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
+import time
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -156,3 +161,106 @@ class ServeEngine:
             self.step()
             ticks += 1
         return self.stats
+
+
+# ---------------------------------------------------------------------------
+# ANN micro-batching front end (LANNS §7 online serving)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AnnRequest:
+    """One in-flight ANN query; results land in place when its batch runs."""
+
+    uid: int
+    query: np.ndarray  # (d,) float32
+    t_submit: float
+    dists: Optional[np.ndarray] = None  # (topk,) when done
+    ids: Optional[np.ndarray] = None  # (topk,) when done
+
+    @property
+    def done(self) -> bool:
+        return self.ids is not None
+
+
+class AnnFrontend:
+    """Micro-batching broker front end over a ``LannsIndex``-like object.
+
+    Queries arrive one at a time (``submit``); the front end coalesces them
+    and fires ONE batched ``index.query`` per micro-batch, when either
+    ``max_batch`` queries are pending (throughput bound) or the oldest has
+    queued for ``max_wait_ms`` (latency bound).  Amortizing the per-call
+    routing/merge overhead over the batch is what makes the paper's
+    single-node QPS claim reachable; see benchmarks/bench_online_qps.py.
+
+    ``clock`` is injectable so tests can drive deadlines deterministically.
+    """
+
+    def __init__(
+        self,
+        index,
+        *,
+        topk: int = 100,
+        max_batch: int = 64,
+        max_wait_ms: float = 2.0,
+        ef: Optional[int] = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.index = index
+        self.topk = topk
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.ef = ef
+        self.clock = clock
+        self.pending: list[AnnRequest] = []
+        self._uid = 0
+        self.stats = {
+            "submitted": 0, "completed": 0, "batches": 0,
+            "full_batches": 0, "deadline_batches": 0, "forced_batches": 0,
+        }
+
+    def submit(self, query: np.ndarray) -> AnnRequest:
+        req = AnnRequest(self._uid, np.asarray(query, np.float32), self.clock())
+        self._uid += 1
+        self.pending.append(req)
+        self.stats["submitted"] += 1
+        return req
+
+    def step(self) -> list[AnnRequest]:
+        """Flush every due micro-batch; returns the completed requests."""
+        done: list[AnnRequest] = []
+        while len(self.pending) >= self.max_batch:
+            done += self._execute(self.pending[: self.max_batch], "full_batches")
+            self.pending = self.pending[self.max_batch:]
+        if self.pending and (
+            self.clock() - self.pending[0].t_submit >= self.max_wait_s
+        ):
+            done += self._execute(self.pending, "deadline_batches")
+            self.pending = []
+        return done
+
+    def flush(self) -> list[AnnRequest]:
+        """Drain everything pending regardless of deadlines (shutdown path)."""
+        done: list[AnnRequest] = []
+        while self.pending:
+            batch = self.pending[: self.max_batch]
+            self.pending = self.pending[self.max_batch:]
+            done += self._execute(batch, "forced_batches")
+        return done
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.stats["completed"] / max(self.stats["batches"], 1)
+
+    def _execute(self, batch: list[AnnRequest], kind: str) -> list[AnnRequest]:
+        q = np.stack([r.query for r in batch])
+        d, i = self.index.query(q, self.topk, ef=self.ef)
+        d, i = np.asarray(d), np.asarray(i)
+        for j, r in enumerate(batch):
+            r.dists, r.ids = d[j], i[j]
+        self.stats["batches"] += 1
+        self.stats[kind] += 1
+        self.stats["completed"] += len(batch)
+        return list(batch)

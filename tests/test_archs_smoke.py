@@ -24,8 +24,6 @@ def test_all_archs_have_cells():
 def test_lm_param_counts_match_published():
     """num_params() should land near the published sizes (the exact configs
     are the point of the exercise)."""
-    import numpy as np
-
     expected = {
         "codeqwen1.5-7b": 7.3e9,
         "qwen2-72b": 72.7e9,

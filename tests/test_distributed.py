@@ -6,7 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 
 def run_child(code: str, devices: int = 8, timeout: int = 900):
@@ -39,8 +38,8 @@ def test_distributed_lanns_full_scan_recall():
         from repro.serve.retrieval import build_device_index, make_serve_fn
         from repro.data.synthetic import clustered_vectors
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
         # confidence chosen so perShardTopK == k: full scan is then exact
         cfg = LannsConfig(num_shards=4, num_segments=4, segmenter="apd",
                           engine="scan", topk_confidence=1 - 1e-9)
@@ -69,8 +68,8 @@ def test_distributed_lanns_routed_beats_nothing():
         from repro.serve.retrieval import build_device_index, make_serve_fn
         from repro.data.synthetic import clustered_vectors
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
         cfg = LannsConfig(num_shards=4, num_segments=4, segmenter="apd",
                           engine="scan", alpha=0.15)
         data = clustered_vectors(4000, 24, n_clusters=64, seed=3)
@@ -122,8 +121,8 @@ def test_gnn_shard_map_loss_matches_local():
                                  batch["t_in"], batch["t_out"], batch["z"])
             return jnp.mean((pred - batch["y"]) ** 2)
 
-        mesh = jax.make_mesh((4,), ("lanes",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((4,), ("lanes",))
         def lane_loss(p, b):
             bb = jax.tree.map(lambda a: a[0], b)
             _, g = dn.apply(p, cfg, positions=bb["positions"],
@@ -160,8 +159,8 @@ def test_hierarchical_grad_sync_equals_global_mean():
         from jax.experimental.shard_map import shard_map
         from repro.distributed.collectives import hierarchical_grad_sync
 
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 4), ("pod", "data"))
         g = jnp.arange(8 * 33, dtype=jnp.float32).reshape(8, 33)
 
         def local(gl):
@@ -188,8 +187,8 @@ def test_ring_topk_merge_matches_allgather():
         from jax.experimental.shard_map import shard_map
         from repro.distributed.collectives import ring_topk_merge
 
-        mesh = jax.make_mesh((4,), ("s",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((4,), ("s",))
         rng = np.random.default_rng(0)
         d = jnp.asarray(rng.standard_normal((4, 3, 8)).astype(np.float32))
         ids = jnp.asarray(rng.permutation(4 * 3 * 8).reshape(4, 3, 8).astype(np.int32))
@@ -254,8 +253,8 @@ def test_distributed_lanns_int8_corpus():
         from repro.serve.retrieval import build_device_index, make_serve_fn
         from repro.data.synthetic import sift_like
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 4), ("data", "model"))
         cfg = LannsConfig(num_shards=4, num_segments=4, segmenter="apd",
                           engine="scan", topk_confidence=1 - 1e-9)
         data, qs = sift_like(4000, 24, 64, seed=0)
@@ -285,8 +284,8 @@ def test_pod_sharded_corpus_two_stage_merge():
         from repro.serve.retrieval import build_device_index, make_serve_fn
         from repro.data.synthetic import sift_like
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = LannsConfig(num_shards=4, num_segments=2, segmenter="apd",
                           engine="scan", topk_confidence=1 - 1e-9)
         data, qs = sift_like(3000, 16, 32, seed=0)

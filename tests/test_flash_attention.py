@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention import flash_attention, flash_attention_bhsd
+from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.models.layers import chunked_attention, dot_attention
 
 CASES = [

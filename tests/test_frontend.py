@@ -1,0 +1,90 @@
+"""AnnFrontend micro-batching semantics (deterministic via injected clock)."""
+
+import numpy as np
+import pytest
+
+from repro.core import LannsConfig, LannsIndex
+from repro.data.synthetic import clustered_vectors
+from repro.serve.engine import AnnFrontend
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def index_and_queries():
+    data = clustered_vectors(1500, 16, n_clusters=16, seed=0)
+    queries = clustered_vectors(40, 16, n_clusters=16, seed=1)
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                      engine="scan")
+    return LannsIndex(cfg).build(data), queries
+
+
+def test_no_flush_before_deadline_or_max_batch(index_and_queries):
+    idx, queries = index_and_queries
+    clock = FakeClock()
+    fe = AnnFrontend(idx, topk=5, max_batch=8, max_wait_ms=2.0, clock=clock)
+    for q in queries[:3]:
+        fe.submit(q)
+    assert fe.step() == []
+    assert len(fe.pending) == 3
+
+
+def test_flush_at_max_batch(index_and_queries):
+    idx, queries = index_and_queries
+    clock = FakeClock()
+    fe = AnnFrontend(idx, topk=5, max_batch=8, max_wait_ms=1e9, clock=clock)
+    reqs = [fe.submit(q) for q in queries[:17]]
+    done = fe.step()
+    # two full batches fire; one submission stays pending
+    assert len(done) == 16
+    assert fe.stats["full_batches"] == 2
+    assert len(fe.pending) == 1
+    assert all(r.done for r in reqs[:16]) and not reqs[16].done
+
+
+def test_flush_at_deadline(index_and_queries):
+    idx, queries = index_and_queries
+    clock = FakeClock()
+    fe = AnnFrontend(idx, topk=5, max_batch=64, max_wait_ms=2.0, clock=clock)
+    req = fe.submit(queries[0])
+    clock.advance(0.001)
+    assert fe.step() == []
+    clock.advance(0.0015)  # oldest has now waited 2.5ms >= 2ms
+    done = fe.step()
+    assert done == [req] and req.done
+    assert fe.stats["deadline_batches"] == 1
+
+
+def test_results_match_direct_query(index_and_queries):
+    idx, queries = index_and_queries
+    clock = FakeClock()
+    fe = AnnFrontend(idx, topk=10, max_batch=16, max_wait_ms=1e9, clock=clock)
+    reqs = [fe.submit(q) for q in queries[:16]]
+    fe.step()
+    want_d, want_i = idx.query(queries[:16], 10)
+    got_d = np.stack([r.dists for r in reqs])
+    got_i = np.stack([r.ids for r in reqs])
+    assert np.array_equal(got_i, np.asarray(want_i))
+    assert np.allclose(got_d, np.asarray(want_d), equal_nan=True)
+
+
+def test_flush_drains_everything(index_and_queries):
+    idx, queries = index_and_queries
+    clock = FakeClock()
+    fe = AnnFrontend(idx, topk=5, max_batch=8, max_wait_ms=1e9, clock=clock)
+    reqs = [fe.submit(q) for q in queries[:5]]
+    done = fe.flush()
+    assert len(done) == 5 and all(r.done for r in reqs)
+    assert fe.pending == []
+    assert fe.stats["forced_batches"] == 1
+    assert fe.stats["completed"] == 5
+    assert fe.mean_batch_size == 5.0

@@ -1,6 +1,5 @@
 """End-to-end LannsIndex: recall vs brute force, persistence, resume, spill."""
 
-import os
 
 import numpy as np
 import pytest
@@ -10,7 +9,6 @@ from repro.core import (
     LannsIndex,
     brute_force_topk,
     recall_at_k,
-    recall_table,
 )
 from repro.data.synthetic import clustered_vectors
 

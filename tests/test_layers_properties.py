@@ -1,9 +1,10 @@
 """Property tests for the transformer primitives."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import (

@@ -2,14 +2,22 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import merge_topk, merge_topk_np, per_shard_topk, two_level_merge_np
+from repro.core import (
+    merge_topk,
+    merge_topk_np,
+    merge_topk_vec,
+    per_shard_topk,
+    two_level_merge_np,
+)
 from repro.core.merge import _probit
 
 
 def test_probit_matches_scipy():
-    from scipy.stats import norm
+    norm = pytest.importorskip("scipy.stats").norm
 
     for q in (0.01, 0.1, 0.5, 0.9, 0.975, 0.999):
         assert _probit(q) == pytest.approx(norm.ppf(q), abs=1e-6)
@@ -95,6 +103,31 @@ def test_property_merge_equals_global_topk(S, m, k):
     )
     assert np.allclose(want_d, got_d)
     assert np.array_equal(want_i, got_i)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**32 - 1),
+    st.integers(min_value=1, max_value=48),
+    st.integers(min_value=1, max_value=24),
+    st.floats(min_value=0.0, max_value=0.6),
+    st.floats(min_value=0.0, max_value=0.4),
+)
+def test_property_merge_vec_parity(seed, C, k, dup_frac, inf_frac):
+    """merge_topk_vec == merge_topk_np on adversarial candidate lists:
+    duplicate ids (small id range), -1 ids, ±inf distances, tied dists."""
+    rng = np.random.default_rng(seed)
+    R = 4
+    id_hi = max(int(C * (1.0 - dup_frac)), 1)
+    ids = rng.integers(-1, id_hi, (R, C)).astype(np.int64)
+    # quantized dists force ties; sprinkle ±inf
+    d = (rng.integers(0, 8, (R, C)) / 4.0).astype(np.float32)
+    d[rng.random((R, C)) < inf_frac] = np.inf
+    d[rng.random((R, C)) < inf_frac / 2] = -np.inf
+    rd, ri = merge_topk_np(d, ids, k)
+    vd, vi = merge_topk_vec(d, ids, k)
+    assert np.array_equal(ri, vi)
+    assert np.array_equal(rd, vd)
 
 
 def test_two_level_merge_respects_pstk():

@@ -1,0 +1,120 @@
+"""Vectorized merge parity vs the Python-loop reference.
+
+These run in the minimal env (no hypothesis): seeded randomized sweeps over
+the adversarial cases the offline executor actually produces — duplicate ids
+from spill, -1 / +inf padding from empty partitions, ±inf distances, ties.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.merge import merge_topk_np, merge_topk_vec
+
+
+def _assert_parity(d, i, k):
+    rd, ri = merge_topk_np(d, i, k)
+    vd, vi = merge_topk_vec(d, i, k)
+    assert vd.shape == rd.shape and vi.shape == ri.shape
+    assert np.array_equal(ri, vi), (ri, vi)
+    assert np.array_equal(rd, vd), (rd, vd)
+
+
+def test_dedups_and_sorts():
+    d = np.array([[3.0, 1.0, 2.0, 1.0, np.inf]])
+    i = np.array([[7, 3, 9, 3, -1]])
+    vd, vi = merge_topk_vec(d, i, 3)
+    assert vi.tolist() == [[3, 9, 7]]
+    assert vd.tolist() == [[1.0, 2.0, 3.0]]
+
+
+def test_duplicate_keeps_best_copy():
+    d = np.array([[5.0, 2.0, 9.0, 4.0]], np.float32)
+    i = np.array([[11, 11, 11, 3]], np.int64)
+    vd, vi = merge_topk_vec(d, i, 4)
+    assert vi[0, :2].tolist() == [11, 3]
+    assert vd[0, :2].tolist() == [2.0, 4.0]
+    assert (vi[0, 2:] == -1).all() and np.isinf(vd[0, 2:]).all()
+
+
+def test_all_invalid_pads():
+    d = np.full((2, 6), np.inf, np.float32)
+    i = np.full((2, 6), -1, np.int64)
+    vd, vi = merge_topk_vec(d, i, 3)
+    assert (vi == -1).all() and np.isinf(vd).all()
+
+
+def test_neg_inf_dropped_like_reference():
+    # merge_topk_np skips ±inf distances; the vectorized path must agree.
+    d = np.array([[-np.inf, 1.0, np.inf, 0.5]], np.float32)
+    i = np.array([[4, 5, 6, 7]], np.int64)
+    _assert_parity(d, i, 3)
+    vd, vi = merge_topk_vec(d, i, 3)
+    assert vi.tolist() == [[7, 5, -1]]
+
+
+def test_k_larger_than_candidates():
+    d = np.array([[2.0, 1.0]], np.float32)
+    i = np.array([[5, 9]], np.int64)
+    vd, vi = merge_topk_vec(d, i, 5)
+    assert vi.tolist() == [[9, 5, -1, -1, -1]]
+    assert np.isinf(vd[0, 2:]).all()
+
+
+def test_leading_axes_preserved():
+    rng = np.random.default_rng(0)
+    d = rng.standard_normal((3, 4, 20)).astype(np.float32)
+    i = rng.integers(0, 15, (3, 4, 20)).astype(np.int64)
+    vd, vi = merge_topk_vec(d, i, 6)
+    assert vd.shape == (3, 4, 6) and vi.shape == (3, 4, 6)
+    _assert_parity(d, i, 6)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_randomized_parity_sweep(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(40):
+        R = int(rng.integers(1, 5))
+        C = int(rng.integers(1, 60))
+        k = int(rng.integers(1, 25))
+        # small id range => heavy duplication; -1 sprinkled in
+        ids = rng.integers(-1, max(C // 2, 2), (R, C)).astype(np.int64)
+        # quantized distances => ties; ±inf sprinkled in
+        d = (rng.integers(0, 10, (R, C)) / 4.0).astype(np.float32)
+        d[rng.random((R, C)) < 0.15] = np.inf
+        d[rng.random((R, C)) < 0.05] = -np.inf
+        _assert_parity(d, ids, k)
+
+
+def test_valid_id_equal_to_sentinel_survives():
+    """A valid candidate whose id equals iinfo(dtype).max (the internal
+    invalid-id sentinel) must not be dropped."""
+    imax = np.iinfo(np.int32).max
+    d = np.array([[0.5, 1.0, np.inf]], np.float32)
+    i = np.array([[imax, 5, -1]], np.int32)
+    _assert_parity(d, i, 3)
+    vd, vi = merge_topk_vec(d, i, 2)
+    assert vi.tolist() == [[imax, 5]]
+    assert vd.tolist() == [[0.5, 1.0]]
+    # and a duplicated sentinel-valued id still dedups to its best copy
+    d = np.array([[2.0, 0.25]], np.float32)
+    i = np.array([[imax, imax]], np.int32)
+    _assert_parity(d, i, 2)
+
+
+def test_float_ids_parity():
+    """two_level_merge_np historically accepted float id arrays."""
+    rng = np.random.default_rng(5)
+    d = rng.standard_normal((3, 16)).astype(np.float32)
+    i = rng.integers(-1, 9, (3, 16)).astype(np.float64)
+    _assert_parity(d, i, 5)
+    _, vi = merge_topk_vec(d, i, 5)
+    assert vi.dtype == np.float64
+
+
+def test_int32_ids_dtype_preserved():
+    rng = np.random.default_rng(3)
+    d = rng.standard_normal((2, 12)).astype(np.float32)
+    i = rng.integers(-1, 8, (2, 12)).astype(np.int32)
+    vd, vi = merge_topk_vec(d, i, 4)
+    assert vi.dtype == np.int32 and vd.dtype == np.float32
+    _assert_parity(d, i, 4)

@@ -1,0 +1,61 @@
+"""distance_topk metric handling — the cos single-normalization fix.
+
+The cos path in ops.distance_topk normalizes q/x once and must hand the jnp
+fallback (and the k_pad>256 path) metric='ip'; passing 'cos' through used to
+re-normalize inside ref.distance_matrix.  Idempotent up to fp error, so these
+pin parity between the fixed path, the oracle, and the double-normalized
+legacy behaviour."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _rand(B, N, D, seed=0):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, D)).astype(np.float32) * 3.0
+    x = rng.standard_normal((N, D)).astype(np.float32) * 0.5
+    return q, x
+
+
+def test_cos_jnp_matches_oracle():
+    q, x = _rand(16, 300, 24)
+    d, i = ops.distance_topk(q, x, 10, "cos", backend="jnp")
+    d_r, i_r = ref.distance_topk_ref(jnp.asarray(q), jnp.asarray(x), 10, "cos")
+    assert np.array_equal(np.asarray(i), np.asarray(i_r))
+    assert np.allclose(np.asarray(d), np.asarray(d_r), atol=1e-5)
+
+
+def test_cos_jnp_matches_double_normalized_legacy():
+    q, x = _rand(8, 200, 16, seed=1)
+    d, i = ops.distance_topk(q, x, 8, "cos", backend="jnp")
+    # legacy behaviour: normalize, then score with metric='cos' (normalizes
+    # again inside distance_matrix)
+    qn = q / np.maximum(np.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+    xn = x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+    d_l, i_l = ref.distance_topk_blocked(
+        jnp.asarray(qn), jnp.asarray(xn), 8, "cos"
+    )
+    assert np.array_equal(np.asarray(i), np.asarray(i_l))
+    assert np.allclose(np.asarray(d), np.asarray(d_l), atol=1e-5)
+
+
+def test_cos_large_k_fallback_single_normalizes():
+    # k_pad > 256 streams through the blocked jnp merge even with
+    # backend='pallas_interpret' requested; ids must match the oracle.
+    q, x = _rand(4, 600, 16, seed=2)
+    d, i = ops.distance_topk(q, x, 300, "cos", backend="pallas_interpret")
+    d_r, i_r = ref.distance_topk_ref(jnp.asarray(q), jnp.asarray(x), 300, "cos")
+    assert np.array_equal(np.asarray(i), np.asarray(i_r))
+    assert np.allclose(np.asarray(d), np.asarray(d_r), atol=1e-5)
+
+
+def test_ip_on_prenormalized_equals_cos():
+    q, x = _rand(8, 150, 16, seed=3)
+    qn = q / np.linalg.norm(q, axis=-1, keepdims=True)
+    xn = x / np.linalg.norm(x, axis=-1, keepdims=True)
+    d_ip, i_ip = ops.distance_topk(qn, xn, 6, "ip", backend="jnp")
+    d_cos, i_cos = ops.distance_topk(q, x, 6, "cos", backend="jnp")
+    assert np.array_equal(np.asarray(i_ip), np.asarray(i_cos))
+    assert np.allclose(np.asarray(d_ip), np.asarray(d_cos), atol=1e-5)

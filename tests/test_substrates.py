@@ -2,7 +2,6 @@
 compression."""
 
 import os
-import time
 
 import jax
 import jax.numpy as jnp
