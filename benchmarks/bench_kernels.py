@@ -1,4 +1,5 @@
-"""Kernel micro-bench: fused distance+top-k vs unfused oracle.
+"""Kernel micro-bench: fused distance+top-k vs unfused oracle, plus the
+jitted merge_topk dedup forms (two-lexsort vs retired scatter-min).
 
 On this CPU container wall-clock comes from the XLA:CPU jnp path (the Pallas
 kernel itself is validated in interpret mode — a Python loop, not timed).
@@ -13,7 +14,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
+from repro.core.merge import merge_topk, merge_topk_scatter
 from repro.kernels import ref
+
+
+def run_merge():
+    """ROADMAP item: the two-lexsort jnp merge_topk vs the old vmapped
+    scatter-min, on the (B*S, routes*pstk) shapes the executor produces."""
+    rng = np.random.default_rng(0)
+    for (R, C, k) in [(1024, 64, 16), (1024, 512, 100), (4096, 128, 32)]:
+        d = jnp.asarray(rng.standard_normal((R, C)).astype(np.float32))
+        i = jnp.asarray(rng.integers(0, C // 2, (R, C)).astype(np.int32))
+        f_lex = jax.jit(lambda d, i: merge_topk(d, i, k))
+        f_sca = jax.jit(lambda d, i: merge_topk_scatter(d, i, k))
+        f_lex(d, i)[0].block_until_ready()
+        f_sca(d, i)[0].block_until_ready()
+        t_lex, _ = time_call(lambda: f_lex(d, i)[0].block_until_ready(),
+                             repeats=5)
+        t_sca, _ = time_call(lambda: f_sca(d, i)[0].block_until_ready(),
+                             repeats=5)
+        emit(
+            f"kernel_merge_topk.R{R}.C{C}.k{k}",
+            1e6 * t_lex,
+            f"scatter_us={1e6 * t_sca:.0f};"
+            f"speedup={t_sca / t_lex:.2f}x",
+        )
 
 
 def run():
@@ -41,6 +66,7 @@ def run():
             f"hbm_bytes_unfused={bytes_unfused:.3e};"
             f"traffic_saving={bytes_unfused / bytes_fused:.2f}x",
         )
+    run_merge()
 
 
 if __name__ == "__main__":

@@ -61,6 +61,7 @@ def main(argv=None):
         "online_qps": lambda: bench_online_qps.run(
             n=6000 if args.fast else 16_000,
             duration_s=1.0 if args.fast else 3.0,
+            n_hnsw=4000 if args.fast else 12_000,
         ),
         "kernels": bench_kernels.run,
         "roofline": roofline.run,

@@ -56,6 +56,20 @@ def next_pow2(n: int) -> int:
     return 1 << max(n - 1, 1).bit_length() if n & (n - 1) else max(n, 1)
 
 
+def next_pow2_quarter(n: int) -> int:
+    """Smallest v >= n on the quarter-pow2 grid {4,5,6,7} * 2^e (plus the
+    exact small values 1..4).
+
+    Shape-bucketing compromise: pow2 buckets waste up to 2x padded work,
+    exact shapes retrace per size; quarter steps bound padding waste at 25%
+    while keeping the trace count logarithmic."""
+    n = max(int(n), 1)
+    if n <= 4:
+        return n
+    step = 1 << ((n - 1).bit_length() - 3)
+    return -(-n // step) * step
+
+
 def pad_to(a: np.ndarray, n: int, fill=0) -> np.ndarray:
     """Pad axis 0 of ``a`` up to length ``n`` with ``fill``."""
     if a.shape[0] == n:
@@ -77,6 +91,18 @@ def pad_axis_to(a: np.ndarray, axis: int, n: int, fill=0) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # Timing / accounting
 # ---------------------------------------------------------------------------
+
+
+def jit_cache_size(fn) -> int:
+    """Compiled-trace count of a jitted function, -1 if unavailable.
+
+    ``_cache_size`` is a private jax API (stable across 0.4.x but
+    undocumented); serving stats must degrade, not crash, if it goes away.
+    """
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return -1
 
 
 class Timer:

@@ -11,6 +11,7 @@ from repro.core.lanns import LannsConfig, LannsIndex
 from repro.core.merge import (
     merge_topk,
     merge_topk_np,
+    merge_topk_scatter,
     merge_topk_vec,
     per_shard_topk,
     two_level_merge_np,
@@ -43,6 +44,7 @@ __all__ = [
     "make_segmenter",
     "merge_topk",
     "merge_topk_np",
+    "merge_topk_scatter",
     "merge_topk_vec",
     "per_shard_topk",
     "recall_at_k",

@@ -24,10 +24,20 @@ Frozen layout
 -------------
 ``vectors``      (n, d)  float32   — corpus (cosine-normalized if metric=cos)
 ``adj0``         (n, 2M) int32     — level-0 adjacency, -1 padded
-``level_nodes``  list[(n_l,)]      — global ids present at level l >= 1
-``level_adj``    list[(n_l, M)]    — adjacency at level l >= 1 (global ids)
-``level_loc``    list[(n,)]        — global id -> local row at level l (-1 absent)
+``upper_adj``    (L, n, M) int32   — adjacency at levels 1..L, indexed by
+                                     GLOBAL id (-1 rows for nodes absent at
+                                     that level), so one fixed-shape stack
+                                     replaces the ragged per-level lists
 ``entry``        int               — entry point (top-level node)
+
+Trace stability (the serving contract): ``device_arrays`` pads ``n`` and
+``L`` to caller-chosen buckets and caches the resulting device pytree on the
+index, so (a) the graph uploads host->device ONCE per (n_pad, l_pad) bucket,
+and (b) every partition padded to the same bucket reuses one ``beam_search``
+trace.  ``beam_search_flat`` goes further and runs ALL partitions of an
+index in a single vmapped call over flattened (partition, query) lanes —
+the ``LannsIndex.query`` hot path; ``beam_search_stacked`` is the dense
+(P, C) variant kept for the TPU dispatch comparison (ROADMAP).
 """
 
 from __future__ import annotations
@@ -294,26 +304,18 @@ class HNSWIndex:
         for i, nbrs in self._adj[0].items():
             k = min(len(nbrs), cfg.m_max0)
             adj0[i, :k] = nbrs[:k]
-        level_nodes, level_adj, level_loc = [], [], []
+        n_upper = max(len(self._adj) - 1, 0)
+        upper_adj = np.full((n_upper, n, cfg.M), -1, dtype=np.int32)
         for l in range(1, len(self._adj)):
-            ids = np.asarray(sorted(self._adj[l].keys()), dtype=np.int32)
-            a = np.full((len(ids), cfg.M), -1, dtype=np.int32)
-            loc = np.full(n, -1, dtype=np.int32)
-            for r, i in enumerate(ids):
-                nbrs = self._adj[l][i][: cfg.M]
-                a[r, : len(nbrs)] = nbrs
-                loc[i] = r
-            level_nodes.append(ids)
-            level_adj.append(a)
-            level_loc.append(loc)
+            for i, nbrs in self._adj[l].items():
+                nbrs = nbrs[: cfg.M]
+                upper_adj[l - 1, i, : len(nbrs)] = nbrs
         self._frozen = FrozenHNSW(
             config=cfg,
             vectors=vecs,
             levels=levels,
             adj0=adj0,
-            level_nodes=level_nodes,
-            level_adj=level_adj,
-            level_loc=level_loc,
+            upper_adj=upper_adj,
             entry=self.entry,
             keys=self.keys,
         )
@@ -347,6 +349,22 @@ class HNSWIndex:
         return out_d, out_i
 
 
+def stack_upper_adj(
+    level_nodes: list, level_adj: list, n: int, M: int
+) -> np.ndarray:
+    """Convert the legacy ragged (level_nodes, level_adj) lists to the
+    stacked (L, n, M) global-id adjacency (used when loading old artifacts)."""
+    L = len(level_adj)
+    upper = np.full((L, n, M), -1, dtype=np.int32)
+    for l in range(L):
+        ids = np.asarray(level_nodes[l], dtype=np.int64)
+        a = np.asarray(level_adj[l], dtype=np.int32)
+        m = min(a.shape[1], M) if a.size else 0
+        if len(ids):
+            upper[l, ids, :m] = a[:, :m]
+    return upper
+
+
 @dataclasses.dataclass
 class FrozenHNSW:
     """Immutable array-form HNSW, ready for jit search / serialization."""
@@ -355,46 +373,111 @@ class FrozenHNSW:
     vectors: np.ndarray
     levels: np.ndarray
     adj0: np.ndarray
-    level_nodes: list
-    level_adj: list
-    level_loc: list
+    upper_adj: np.ndarray  # (L, n, M) global-id adjacency, -1 padded
     entry: int
     keys: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        self._device_cache: dict = {}
 
     @property
     def size(self) -> int:
         return self.vectors.shape[0]
 
-    def device_arrays(self):
-        """The pytree consumed by ``beam_search`` (device-resident state)."""
-        return {
-            "vectors": jnp.asarray(self.vectors),
-            "adj0": jnp.asarray(self.adj0),
-            "level_adj": [jnp.asarray(a) for a in self.level_adj],
-            "level_loc": [jnp.asarray(l) for l in self.level_loc],
+    @property
+    def num_upper_levels(self) -> int:
+        return self.upper_adj.shape[0]
+
+    def device_arrays(self, n_pad: Optional[int] = None,
+                      l_pad: Optional[int] = None, *, cached: bool = True):
+        """The pytree consumed by ``beam_search`` (device-resident state).
+
+        ``n_pad``/``l_pad`` pad the corpus rows / upper-level count to shared
+        bucket sizes so beam_search traces are reused across partitions
+        (padding rows are -1 adjacency = unreachable, zero vectors = never
+        scored).  The pytree is built and uploaded ONCE per (n_pad, l_pad)
+        bucket and cached on the index — serving must never re-ship the graph
+        host->device per call.
+        """
+        n = self.size
+        n_pad = n if n_pad is None else n_pad
+        l_pad = self.num_upper_levels if l_pad is None else l_pad
+        if n_pad < n or l_pad < self.num_upper_levels:
+            raise ValueError(
+                f"pad ({n_pad}, {l_pad}) smaller than index "
+                f"({n}, {self.num_upper_levels})"
+            )
+        key = (n_pad, l_pad)
+        if cached and key in self._device_cache:
+            return self._device_cache[key]
+        from repro.common.utils import pad_axis_to, pad_to
+
+        vecs = pad_to(self.vectors, n_pad)
+        adj0 = pad_to(self.adj0, n_pad, fill=-1)
+        upper = pad_axis_to(self.upper_adj, 1, n_pad, fill=-1)
+        upper = pad_to(upper, l_pad, fill=-1)
+        arrs = {
+            "vectors": jnp.asarray(vecs),
+            "adj0": jnp.asarray(adj0),
+            "upper_adj": jnp.asarray(upper),
             "entry": jnp.asarray(self.entry, dtype=jnp.int32),
         }
+        if cached:
+            self._device_cache[key] = arrs
+        return arrs
 
-    def search(self, queries, k: int, ef: Optional[int] = None, max_iters: int = 0):
-        """Batched jit beam search. Returns (dists (B,k), ids (B,k))."""
+    def search(
+        self,
+        queries,
+        k: int,
+        ef: Optional[int] = None,
+        max_iters: int = 0,
+        *,
+        n_pad: Optional[int] = None,
+        l_pad: Optional[int] = None,
+        cached: bool = True,
+        pad_queries: bool = True,
+    ):
+        """Batched jit beam search. Returns (dists (B,k), ids (B,k)).
+
+        pad_queries=True pads the batch to its quarter-pow2 bucket (see
+        ``next_pow2_quarter``: <= 25% padding, ~4 buckets per octave) so
+        routed subsets of every size reuse a bounded set of traces.
+        cached=False rebuilds the device pytree per call (the
+        pre-device-resident behaviour; kept for before/after benchmarking).
+        """
         cfg = self.config
         ef = max(ef or cfg.ef_search, k)
         if max_iters <= 0:
             max_iters = ef + 2 * cfg.M
-        q = jnp.asarray(queries, dtype=jnp.float32)
+        q = np.asarray(queries, dtype=np.float32)
+        B = q.shape[0]
+        if B == 0:
+            return (np.full((0, k), _INF, np.float32),
+                    np.full((0, k), -1, np.int64))
         if cfg.metric == "cos":
-            q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
-        arrs = self.device_arrays()
+            q = q / np.maximum(
+                np.linalg.norm(q, axis=-1, keepdims=True), 1e-12
+            )
+        valid = None
+        if pad_queries:
+            from repro.common.utils import next_pow2_quarter, pad_to
+
+            B_pad = next_pow2_quarter(B)
+            if B_pad != B:
+                q = pad_to(q, B_pad)
+                valid = jnp.asarray(np.arange(B_pad) < B)
+        arrs = self.device_arrays(n_pad, l_pad, cached=cached)
         d, i = beam_search(
             arrs,
-            q,
+            jnp.asarray(q),
+            valid,
             k=k,
             ef=ef,
             max_iters=max_iters,
             metric="l2" if cfg.metric == "l2" else "ip",
-            num_upper_levels=len(self.level_adj),
         )
-        d, i = np.asarray(d), np.asarray(i)
+        d, i = np.asarray(d)[:B], np.asarray(i)[:B]
         if self.keys is not None:
             valid = i >= 0
             i = np.where(valid, self.keys[np.clip(i, 0, None)], -1)
@@ -416,39 +499,48 @@ def _distance_rows(metric, q, x):
     return -(x @ q)
 
 
-@partial(
-    jax.jit,
-    static_argnames=("k", "ef", "max_iters", "metric", "num_upper_levels"),
-)
-def beam_search(arrs, queries, *, k, ef, max_iters, metric, num_upper_levels):
-    """Batched HNSW search over frozen arrays.
+def _beam_search_lanes(arrs, queries, entry_rows, offsets, valid, *,
+                       k, ef, max_iters, metric):
+    """The beam-search core, in flat row space.
 
-    Upper levels: greedy descent (while_loop).  Level 0: best-first beam of
-    width ``ef`` kept as dense arrays; each iteration expands the best
-    unexpanded entry.  All ops are fixed-shape so the whole thing jits and
-    shard_maps.  Expanded-set semantics: a node evicted from the beam may be
-    re-inserted and re-expanded later; this wastes a little compute but never
-    hurts correctness (matches the `visited`-free formulations of array HNSW).
+    Upper levels: greedy descent (while_loop) over the stacked (L, n, M)
+    row-indexed adjacency — a padding level (all -1 rows) is a no-op walk, so
+    partitions with fewer levels share the trace of the deepest one.  Level 0:
+    best-first beam of width ``ef`` kept as dense arrays; each iteration
+    expands the best unexpanded entry.  All ops are fixed-shape so the whole
+    thing jits, vmaps over lanes, and shard_maps.  Expanded-set semantics: a
+    node evicted from the beam may be re-inserted and re-expanded later; this
+    wastes a little compute but never hurts correctness (matches the
+    `visited`-free formulations of array HNSW).
+
+    Each lane walks rows [off, off + n_partition) of the flat arrays:
+    adjacency entries are partition-local, so every gathered neighbor id is
+    shifted by the lane's ``off``.  A single partition is the off == 0
+    special case.  An invalid lane (padding) seeds the walk with a -inf
+    entry distance and an empty beam, so both loops exit immediately.
     """
     vectors = arrs["vectors"]
     adj0 = arrs["adj0"]
-    entry = arrs["entry"]
+    upper_adj = arrs["upper_adj"]
+    num_upper_levels = upper_adj.shape[0]
 
-    def one_query(q):
+    def one_lane(q, ep, off, v):
+        def to_rows(nbrs):
+            return jnp.where(nbrs >= 0, nbrs + off, -1)
+
         # ---- upper levels: greedy walk to a local minimum per level
-        ep = entry
-        ep_d = _distance_rows(metric, q, vectors[ep[None]])[0]
+        ep_d = _distance_rows(metric, q, vectors[jnp.clip(ep, 0)[None]])[0]
+        ep_d = jnp.where(v, ep_d, -jnp.inf)
+        ep = jnp.where(v, ep, -1)
         for l in range(num_upper_levels - 1, -1, -1):
-            adj = arrs["level_adj"][l]
-            loc = arrs["level_loc"][l]
+            adj = upper_adj[l]
 
             def body(state):
                 ep, ep_d, _ = state
-                row = loc[ep]
-                nbrs = adj[row]
-                valid = nbrs >= 0
+                nbrs = to_rows(adj[jnp.clip(ep, 0)])
+                valid_n = nbrs >= 0
                 nd = _distance_rows(metric, q, vectors[jnp.clip(nbrs, 0)])
-                nd = jnp.where(valid, nd, jnp.inf)
+                nd = jnp.where(valid_n, nd, jnp.inf)
                 j = jnp.argmin(nd)
                 better = nd[j] < ep_d
                 return (
@@ -479,15 +571,15 @@ def beam_search(arrs, queries, *, k, ef, max_iters, metric, num_upper_levels):
             b = jnp.argmin(pick_d)
             beam_exp = beam_exp.at[b].set(True)
             node = beam_ids[b]
-            nbrs = adj0[jnp.clip(node, 0)]
-            valid = nbrs >= 0
+            nbrs = to_rows(adj0[jnp.clip(node, 0)])
+            valid_n = nbrs >= 0
             # dedup against current beam (m0 x ef comparison matrix)
             dup = jnp.any(nbrs[:, None] == beam_ids[None, :], axis=1)
-            valid = valid & (~dup)
+            valid_n = valid_n & (~dup)
             nd = _distance_rows(metric, q, vectors[jnp.clip(nbrs, 0)])
-            nd = jnp.where(valid, nd, jnp.inf)
+            nd = jnp.where(valid_n, nd, jnp.inf)
             # merge (ef + m0) candidates, keep best ef
-            all_ids = jnp.concatenate([beam_ids, jnp.where(valid, nbrs, -1)])
+            all_ids = jnp.concatenate([beam_ids, jnp.where(valid_n, nbrs, -1)])
             all_d = jnp.concatenate([beam_d, nd])
             all_exp = jnp.concatenate([beam_exp, jnp.zeros((m0,), jnp.bool_)])
             neg_top, idx = jax.lax.top_k(-all_d, ef)
@@ -499,4 +591,75 @@ def beam_search(arrs, queries, *, k, ef, max_iters, metric, num_upper_levels):
         neg_top, idx = jax.lax.top_k(-beam_d, k)
         return -neg_top, beam_ids[idx]
 
-    return jax.vmap(one_query)(queries)
+    return jax.vmap(one_lane)(queries, entry_rows, offsets, valid)
+
+
+def _beam_search_impl(arrs, queries, valid=None, *, k, ef, max_iters, metric):
+    """Single-partition batched search: the zero-offset case of the core."""
+    B = queries.shape[0]
+    if valid is None:
+        valid = jnp.ones((B,), dtype=jnp.bool_)
+    entry_rows = jnp.broadcast_to(
+        jnp.asarray(arrs["entry"], jnp.int32), (B,)
+    )
+    offsets = jnp.zeros((B,), jnp.int32)
+    return _beam_search_lanes(
+        {k_: arrs[k_] for k_ in ("vectors", "adj0", "upper_adj")},
+        queries, entry_rows, offsets, valid,
+        k=k, ef=ef, max_iters=max_iters, metric=metric,
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "ef", "max_iters", "metric"))
+def beam_search(arrs, queries, valid=None, *, k, ef, max_iters, metric):
+    """Jit entry point: one partition, queries (B, d) -> ((B, k), (B, k)).
+    ``valid`` (B,) marks real rows of a padded batch; padding rows exit
+    immediately instead of walking the graph."""
+    return _beam_search_impl(
+        arrs, queries, valid, k=k, ef=ef, max_iters=max_iters, metric=metric
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "ef", "max_iters", "metric"))
+def beam_search_flat(arrs, queries, entry_rows, offsets, valid, *,
+                     k, ef, max_iters, metric):
+    """Multi-partition search over FLATTENED partition arrays.
+
+    ``arrs`` holds every partition's rows concatenated: vectors (P*n, d),
+    adj0 (P*n, 2M), upper_adj (L, P*n, M); adjacency entries stay partition-
+    LOCAL.  Each lane of ``queries`` (T, d) carries its partition via
+    ``offsets`` (T,) — the partition's first row in the flat arrays — and
+    starts at ``entry_rows`` (T,) (the partition entry point, already
+    offset).  Gathered neighbor ids are shifted by the lane's offset, so the
+    whole walk runs in global row space and one vmapped call serves an
+    arbitrary mix of (partition, query) pairs.
+
+    vs the dense (P, C) ``beam_search_stacked``: lane count is the NUMBER OF
+    ROUTED PAIRS (padded to a bucket), not partitions x the most-loaded
+    partition's count — under unbalanced routing the dense form wastes up to
+    ~2x lanes, and under vmap every padded lane runs the full loop.  Returns
+    (dists (T, k), rows (T, k)) with rows in global (flat) space; map them
+    through a flat key table host-side.
+    """
+    return _beam_search_lanes(
+        arrs, queries, entry_rows, offsets, valid,
+        k=k, ef=ef, max_iters=max_iters, metric=metric,
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "ef", "max_iters", "metric"))
+def beam_search_stacked(arrs, queries, valid=None, *, k, ef, max_iters, metric):
+    """Multi-partition search: every leaf of ``arrs`` carries a leading
+    partition axis (vectors (P, n, d), adj0 (P, n, 2M), upper_adj
+    (P, L, n, M), entry (P,)) and queries is (P, C, d) — one vmapped
+    ``beam_search`` serves all (shard, segment) partitions in a single call,
+    with no per-partition Python dispatch or host<->device sync.  ``valid``
+    (P, C) marks real query slots; padding slots short-circuit.
+    """
+    if valid is None:
+        valid = jnp.ones(queries.shape[:-1], dtype=jnp.bool_)
+    return jax.vmap(
+        lambda a, q, v: _beam_search_impl(
+            a, q, v, k=k, ef=ef, max_iters=max_iters, metric=metric
+        )
+    )(arrs, queries, valid)

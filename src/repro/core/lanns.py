@@ -29,9 +29,15 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Optional
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.common.utils import Timer, next_pow2
+from repro.common.utils import (
+    Timer,
+    jit_cache_size,
+    next_pow2,
+    next_pow2_quarter,
+)
 from repro.core.hnsw import HNSWConfig, HNSWIndex
 from repro.core.merge import merge_topk_vec, per_shard_topk
 from repro.core.segmenter import SegmenterConfig
@@ -100,9 +106,7 @@ def _build_one_partition(args):
             "adj0": frozen.adj0,
             "entry": frozen.entry,
             "keys": frozen.keys,
-            "level_nodes": frozen.level_nodes,
-            "level_adj": frozen.level_adj,
-            "level_loc": frozen.level_loc,
+            "upper_adj": frozen.upper_adj,
         }
     else:
         payload = {"kind": "scan", "vectors": vectors, "keys": keys}
@@ -143,9 +147,7 @@ class _Partition:
                 vectors=payload["vectors"],
                 levels=payload["levels"],
                 adj0=payload["adj0"],
-                level_nodes=payload["level_nodes"],
-                level_adj=payload["level_adj"],
-                level_loc=payload["level_loc"],
+                upper_adj=payload["upper_adj"],
                 entry=int(payload["entry"]),
                 keys=payload.get("keys"),
             )
@@ -154,7 +156,16 @@ class _Partition:
     def size(self):
         return 0 if self.vectors is None else len(self.vectors)
 
-    def search(self, queries: np.ndarray, k: int, ef: Optional[int] = None):
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int,
+        ef: Optional[int] = None,
+        *,
+        n_pad: Optional[int] = None,
+        l_pad: Optional[int] = None,
+        legacy: bool = False,
+    ):
         if self.size == 0:
             B = queries.shape[0]
             return (
@@ -163,7 +174,20 @@ class _Partition:
             )
         k_eff = min(k, self.size)
         if self.kind == "hnsw":
-            d, i = self.frozen.search(queries, k_eff, ef=ef)
+            if legacy:
+                # pre-device-resident behaviour: re-upload the graph per call
+                # and trace per routed-subset size (before/after benchmarks)
+                d, i = self.frozen.search(
+                    queries, k_eff, ef=ef, cached=False, pad_queries=False
+                )
+            else:
+                # full k even when size < k: the beam's (inf, -1) slots are
+                # exactly the padding below, and a uniform static k keeps one
+                # beam_search trace shared across unevenly-sized partitions.
+                d, i = self.frozen.search(
+                    queries, k, ef=ef, n_pad=n_pad, l_pad=l_pad
+                )
+                k_eff = k
         else:
             metric = (
                 "l2" if self.config.metric == "mips" else self.config.metric
@@ -189,6 +213,86 @@ class LannsIndex:
         )
         self.partitions: dict[tuple, _Partition] = {}
         self.build_stats: dict = {}
+        self._stack = None  # lazily-built stacked HNSW device pytree
+
+    # -- stacked HNSW serving state -------------------------------------------
+
+    def _invalidate_stack(self):
+        self._stack = None
+
+    def _hnsw_parts(self):
+        """Servable HNSW partitions, sorted by (shard, segment).
+
+        The single source of the eligibility rule — both dispatch modes
+        (stacked / partition) and the shared pad computation use it, so they
+        can never disagree on which partitions the HNSW paths serve.
+        """
+        return sorted(
+            (sg, p) for sg, p in self.partitions.items()
+            if p.kind == "hnsw" and p.size > 0
+        )
+
+    def _hnsw_stack(self):
+        """Flat device pytree over every non-empty HNSW partition.
+
+        Partition rows concatenate into shared flat arrays — vectors
+        (P*n_pad, d), adj0 (P*n_pad, 2M), upper_adj (l_pad, P*n_pad, M) —
+        with partition p owning rows [p*n_pad, p*n_pad + size).  One
+        ``beam_search_flat`` trace then serves any mix of (partition, query)
+        lanes.  Built host-side and uploaded ONCE, then cached for the life
+        of the partitions.  Returns {} when the index has no HNSW partitions.
+        """
+        if self._stack is not None:
+            return self._stack
+        items = self._hnsw_parts()
+        if not items:
+            self._stack = {}
+            return self._stack
+        P = len(items)
+        n_pad, l_pad = self._hnsw_pads(items)
+        dim = items[0][1].frozen.vectors.shape[1]
+        m0 = items[0][1].frozen.adj0.shape[1]
+        M = items[0][1].frozen.upper_adj.shape[2]
+        vecs = np.zeros((P * n_pad, dim), np.float32)
+        adj0 = np.full((P * n_pad, m0), -1, np.int32)
+        upper = np.full((l_pad, P * n_pad, M), -1, np.int32)
+        entry = np.zeros((P,), np.int32)
+        keys = np.full((P * n_pad,), -1, np.int64)
+        for pi, (_, p) in enumerate(items):
+            fr = p.frozen
+            n = fr.size
+            off = pi * n_pad
+            vecs[off: off + n] = fr.vectors
+            adj0[off: off + n] = fr.adj0
+            upper[: fr.num_upper_levels, off: off + n] = fr.upper_adj
+            entry[pi] = fr.entry
+            keys[off: off + n] = (
+                fr.keys if fr.keys is not None else np.arange(n, dtype=np.int64)
+            )
+        self._stack = {
+            "arrs": {
+                "vectors": jnp.asarray(vecs),
+                "adj0": jnp.asarray(adj0),
+                "upper_adj": jnp.asarray(upper),
+            },
+            "entry": entry,  # per-partition local entry node (host)
+            "keys": keys,
+            "index": {sg: pi for pi, (sg, _) in enumerate(items)},
+            "n_pad": n_pad,
+            "l_pad": l_pad,
+        }
+        return self._stack
+
+    def _hnsw_pads(self, items=None):
+        """Shared (n_pad, l_pad) corpus buckets over the servable partitions."""
+        if items is None:
+            items = self._hnsw_parts()
+        if not items:
+            return None, None
+        return (
+            next_pow2(max(p.size for _, p in items)),
+            max(p.frozen.num_upper_levels for _, p in items),
+        )
 
     # -- build ---------------------------------------------------------------
 
@@ -250,6 +354,7 @@ class LannsIndex:
             per_partition_seconds[f"{s}/{g}"] = secs
             if resume_dir:
                 self._save_partition(resume_dir, s, g, payload)
+        self._invalidate_stack()
         self.build_stats.update(
             assign_seconds=t_assign.seconds,
             build_wall_seconds=t_build.seconds,
@@ -270,6 +375,7 @@ class LannsIndex:
         *,
         ef: Optional[int] = None,
         return_stats: bool = False,
+        hnsw_mode: str = "stacked",  # 'stacked' | 'partition' | 'legacy'
     ):
         """Two-level partitioned search with perShardTopK (paper §5.3).
 
@@ -282,7 +388,24 @@ class LannsIndex:
         routed queries; candidates land in compact per-route slots (sized by
         the worst-case route count, not num_segments) and both merge levels
         run as single vectorized calls over all (query, shard) rows.
+
+        HNSW partitions additionally run device-resident and trace-stable,
+        selected by ``hnsw_mode``:
+
+        * 'stacked' (default) — all partitions packed into one flat padded
+          pytree, ONE vmapped ``beam_search_flat`` call per query batch (no
+          per-partition Python loop or host<->device sync);
+        * 'partition' — per-partition calls against cached device arrays
+          padded to shared (n, L) buckets (bounded trace count);
+        * 'legacy' — the pre-device-resident path: graph re-uploaded and
+          beam_search retraced per routed-subset size (kept as the
+          before/after benchmark baseline and a parity oracle).
         """
+        if hnsw_mode not in ("stacked", "partition", "legacy"):
+            raise ValueError(
+                f"hnsw_mode={hnsw_mode!r} — expected 'stacked', 'partition' "
+                "or 'legacy'"
+            )
         cfg = self.config
         queries = np.asarray(queries, dtype=np.float32)
         if cfg.metric == "mips":
@@ -296,27 +419,51 @@ class LannsIndex:
             )
         B = queries.shape[0]
         S = cfg.num_shards
-        seg_mask = self.partitioner.route_queries(queries)  # (B, m)
         pstk = per_shard_topk(topk, S, cfg.topk_confidence)
+        if B == 0:
+            # well-formed empty outputs; routing/merge would otherwise choke
+            # on zero-length reductions (segments_visited.max()).
+            out_d = np.full((0, topk), np.inf, np.float32)
+            out_i = np.full((0, topk), -1, np.int64)
+            if return_stats:
+                return out_d, out_i, self._query_stats(
+                    pstk, np.zeros((0,), np.int64)
+                )
+            return out_d, out_i
+        seg_mask = self.partitioner.route_queries(queries)  # (B, m)
         segments_visited = seg_mask.sum(axis=1)
         # slot[b, g]: position of segment g among query b's routed segments.
         slot = np.cumsum(seg_mask, axis=1) - 1
-        max_routes = max(int(segments_visited.max()) if B else 0, 1)
+        max_routes = max(int(segments_visited.max()), 1)
         cand_d = np.full((B, S, max_routes, pstk), np.inf, np.float32)
         cand_i = np.full((B, S, max_routes, pstk), -1, np.int64)
+        # routed query subset per segment — shared by every shard's (s, g)
+        # partition, so compute it once.
+        sels = [np.nonzero(seg_mask[:, g])[0] for g in range(cfg.num_segments)]
+        handled = self._query_hnsw_stacked(
+            queries, sels, slot, cand_d, cand_i, pstk, ef
+        ) if hnsw_mode == "stacked" else set()
+        n_pad = l_pad = None
+        if hnsw_mode == "partition":
+            n_pad, l_pad = self._hnsw_pads()
         for g in range(cfg.num_segments):
-            sel = np.nonzero(seg_mask[:, g])[0]
+            sel = sels[g]
             if sel.size == 0:
                 continue
             q_sel = queries[sel]
             sl = slot[sel, g]
             for s in range(S):
+                if (s, g) in handled:
+                    continue
                 part = self.partitions.get((s, g))
                 if part is None or part.size == 0:
                     continue
                 # the paper propagates the SHARD-level perShardTopK to the
                 # segments (never a per-segment trim) — §5.3.2.
-                d, i = part.search(q_sel, pstk, ef=ef)
+                d, i = part.search(
+                    q_sel, pstk, ef=ef, n_pad=n_pad, l_pad=l_pad,
+                    legacy=(hnsw_mode == "legacy"),
+                )
                 cand_d[sel, s, sl] = d
                 cand_i[sel, s, sl] = i
         # level-1: segment merge inside each shard, all (query, shard) rows
@@ -340,12 +487,103 @@ class LannsIndex:
                 np.inf,
             )
         if return_stats:
-            return out_d, out_i, {
-                "per_shard_topk": pstk,
-                "mean_segments_visited": float(segments_visited.mean()),
-                "max_segments_visited": int(segments_visited.max()),
-            }
+            return out_d, out_i, self._query_stats(pstk, segments_visited)
         return out_d, out_i
+
+    @staticmethod
+    def _query_stats(pstk, segments_visited):
+        """Routing/trace stats dict — one schema for empty and non-empty
+        batches (dashboards index these keys unconditionally)."""
+        from repro.core import hnsw as hnsw_mod
+
+        empty = segments_visited.size == 0
+        return {
+            "per_shard_topk": pstk,
+            "mean_segments_visited":
+                0.0 if empty else float(segments_visited.mean()),
+            "max_segments_visited":
+                0 if empty else int(segments_visited.max()),
+            # process-wide beam_search trace counts: serving dashboards
+            # watch these to confirm the trace set stays bounded.
+            "beam_traces": jit_cache_size(hnsw_mod.beam_search),
+            "beam_traces_flat": jit_cache_size(hnsw_mod.beam_search_flat),
+        }
+
+    def _query_hnsw_stacked(self, queries, sels, slot, cand_d, cand_i, pstk, ef):
+        """One ``beam_search_flat`` call covering every HNSW partition.
+
+        Builds the sparse lane list of (partition, routed query) pairs —
+        partition (s, g) searches the routed subset of segment g (identical
+        across shards) — padded to a quarter-pow2 lane bucket so the call
+        reuses a bounded trace set with <= 25% padding waste even under
+        unbalanced segment routing.  Results scatter into the executor's
+        compact per-route candidate slots.  Returns the set of
+        (shard, segment) partitions served.
+        """
+        stack = self._hnsw_stack()
+        if not stack:
+            return set()
+        from repro.core.hnsw import beam_search_flat
+
+        hcfg = self.config.hnsw_config()
+        q_eff = queries
+        if hcfg.metric == "cos":
+            q_eff = q_eff / np.maximum(
+                np.linalg.norm(q_eff, axis=-1, keepdims=True), 1e-12
+            )
+        n_pad = stack["n_pad"]
+        blocks = []  # (s, g, pi, lane_start, count)
+        q_blocks, off_blocks, ep_blocks = [], [], []
+        T = 0
+        for (s, g), pi in stack["index"].items():
+            sel = sels[g]
+            if len(sel) == 0:
+                continue
+            blocks.append((s, g, pi, T, len(sel)))
+            q_blocks.append(q_eff[sel])
+            off_blocks.append(
+                np.full(len(sel), pi * n_pad, np.int32)
+            )
+            ep_blocks.append(
+                np.full(len(sel), stack["entry"][pi] + pi * n_pad, np.int32)
+            )
+            T += len(sel)
+        handled = {(s, g) for (s, g) in stack["index"]}
+        if T == 0:
+            return handled
+        T_pad = next_pow2_quarter(T)
+        dim = queries.shape[1]
+        Q = np.zeros((T_pad, dim), np.float32)
+        OFF = np.zeros((T_pad,), np.int32)
+        EP = np.zeros((T_pad,), np.int32)
+        Q[:T] = np.concatenate(q_blocks)
+        OFF[:T] = np.concatenate(off_blocks)
+        EP[:T] = np.concatenate(ep_blocks)
+        V = np.arange(T_pad) < T
+        ef_eff = max(ef or hcfg.ef_search, pstk)
+        d_all, i_all = beam_search_flat(
+            stack["arrs"],
+            jnp.asarray(Q),
+            jnp.asarray(EP),
+            jnp.asarray(OFF),
+            jnp.asarray(V),
+            k=pstk,
+            ef=ef_eff,
+            max_iters=ef_eff + 2 * hcfg.M,
+            metric="l2" if hcfg.metric == "l2" else "ip",
+        )
+        # ONE host sync for all partitions (vs one np.asarray per (s, g))
+        d_all, i_all = np.asarray(d_all), np.asarray(i_all)
+        keys_flat = stack["keys"]
+        for (s, g, pi, start, cnt) in blocks:
+            sel = sels[g]
+            d = d_all[start: start + cnt]
+            i = i_all[start: start + cnt].astype(np.int64)
+            i = np.where(i >= 0, keys_flat[np.clip(i, 0, None)], -1)
+            sl = slot[sel, g]
+            cand_d[sel, s, sl] = d
+            cand_i[sel, s, sl] = i
+        return handled
 
     # -- persistence (atomic, resumable) --------------------------------------
 
@@ -394,8 +632,17 @@ class LannsIndex:
                 payload.setdefault(base, [None] * len(items))
                 for idx, arr in items.items():
                     payload[base][idx] = arr
-        for key in ("level_nodes", "level_adj", "level_loc"):
-            payload.setdefault(key, [])
+        if payload.get("kind") == "hnsw" and "upper_adj" not in payload:
+            # legacy artifact (pre-stacked): rebuild the (L, n, M) stack from
+            # the ragged per-level lists it stored.
+            from repro.core.hnsw import stack_upper_adj
+
+            payload["upper_adj"] = stack_upper_adj(
+                payload.get("level_nodes", []),
+                payload.get("level_adj", []),
+                payload["vectors"].shape[0],
+                self.config.hnsw_config().M,
+            )
         return _Partition(payload, self.config)
 
     def save(self, root: str):
@@ -407,8 +654,7 @@ class LannsIndex:
                     fr = part.frozen
                     payload.update(
                         levels=fr.levels, adj0=fr.adj0, entry=fr.entry,
-                        level_nodes=fr.level_nodes, level_adj=fr.level_adj,
-                        level_loc=fr.level_loc,
+                        upper_adj=fr.upper_adj,
                     )
                 self._save_partition(root, s, g, payload)
         seg = self.partitioner.segmenter

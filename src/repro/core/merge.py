@@ -83,10 +83,63 @@ def merge_topk(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
     """Merge candidate lists along the last candidate axis.
 
     dists/ids: (..., C).  Returns ((..., k) dists, (..., k) ids) sorted
-    ascending by distance.  Duplicate ids (a point returned by several
+    ascending by (distance, id).  Duplicate ids (a point returned by several
     segments the query spilled to) are collapsed — keep the best copy.
+
+    Same two-lexsort formulation as ``merge_topk_vec`` (which replaced the
+    earlier vmapped scatter-min dedup, kept below as
+    ``merge_topk_scatter`` for benchmarking): first group by id with distance
+    as tie-break so each id-run's head carries the run minimum, mask the rest
+    of the run, then order survivors by (distance, id).  O(C log C) sorts,
+    no per-row scatter.
     """
-    # Collapse duplicates: sort by id, mark repeats, set their dist to +inf.
+    C = dists.shape[-1]
+    sentinel = (
+        jnp.iinfo(ids.dtype).max
+        if jnp.issubdtype(ids.dtype, jnp.integer) else jnp.inf
+    )
+    invalid = (ids < 0) | jnp.isinf(dists)
+    dk = jnp.where(invalid, jnp.inf, dists)
+    ik = jnp.where(invalid, sentinel, ids)
+    # lexsort by id, then distance (last key is primary, like np.lexsort)
+    order = jnp.lexsort((dk, ik), axis=-1)
+    sid = jnp.take_along_axis(ik, order, axis=-1)
+    sd = jnp.take_along_axis(dk, order, axis=-1)
+    sinv = jnp.take_along_axis(invalid, order, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(sid[..., :1], dtype=bool),
+         sid[..., 1:] == sid[..., :-1]], axis=-1,
+    )
+    sd = jnp.where(dup | sinv, jnp.inf, sd)
+    order = jnp.lexsort((sid, sd), axis=-1)  # by distance, then id
+    kk = min(k, C)
+    take = order[..., :kk]
+    out_d = jnp.take_along_axis(sd, take, axis=-1)
+    out_i = jnp.where(
+        jnp.isinf(out_d), -1, jnp.take_along_axis(sid, take, axis=-1)
+    ).astype(ids.dtype)
+    if kk < k:
+        pad = k - kk
+        out_d = jnp.concatenate(
+            [out_d, jnp.full((*out_d.shape[:-1], pad), jnp.inf, out_d.dtype)],
+            axis=-1,
+        )
+        out_i = jnp.concatenate(
+            [out_i, jnp.full((*out_i.shape[:-1], pad), -1, out_i.dtype)],
+            axis=-1,
+        )
+    return out_d, out_i
+
+
+@partial(jax.jit, static_argnames=("k",))
+def merge_topk_scatter(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """The previous ``merge_topk``: vmapped scatter-min dedup + top_k.
+
+    Kept as the benchmark baseline for the two-lexsort form (ROADMAP item;
+    see benchmarks/bench_kernels.py) and as a second parity oracle.  Note its
+    output order is by distance only (ids tie-break unspecified) — parity
+    tests compare against ``merge_topk_np`` on distinct distances.
+    """
     order = jnp.argsort(ids, axis=-1)
     sid = jnp.take_along_axis(ids, order, axis=-1)
     sd = jnp.take_along_axis(dists, order, axis=-1)
@@ -94,10 +147,6 @@ def merge_topk(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
         [jnp.zeros_like(sid[..., :1], dtype=bool), sid[..., 1:] == sid[..., :-1]],
         axis=-1,
     ) & (sid >= 0)
-    # among equal ids keep the first occurrence's best dist: sort puts equal
-    # ids adjacent but not dist-ordered; take cummin over runs via two-pass:
-    # simpler: a duplicate's dist may be better than the kept one, so instead
-    # of masking arbitrarily, reduce with segment-min over runs.
     run_start = ~same
     run_id = jnp.cumsum(run_start.astype(jnp.int32), axis=-1) - 1
     # per-run min distance via scatter-min into a (num_runs<=C,) buffer

@@ -50,6 +50,14 @@ def distance_topk(
     x = jnp.asarray(x)
     B, D = q.shape
     N = x.shape[0]
+    if N == 0:
+        # empty corpus: nothing to rank.  The k > N recursion below would
+        # otherwise bottom out calling the blocked scan with k=0 — return the
+        # (inf, -1) padding directly.
+        return (
+            jnp.full((B, k), jnp.inf, jnp.float32),
+            jnp.full((B, k), -1, jnp.int32),
+        )
     if k > N:  # fewer corpus rows than requested: pad with (inf, -1)
         d, i = distance_topk(
             q, x, N, metric, block_q=block_q, block_n=block_n, backend=backend

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.utils import jit_cache_size, next_pow2
 from repro.distributed.sharding_rules import NULL_CTX, ShardingCtx
 from repro.models import transformer as tf
 
@@ -46,6 +47,25 @@ def make_prefill_fn(cfg: tf.TransformerConfig, ctx: ShardingCtx = NULL_CTX):
             params, cfg, tokens, cache=cache, cache_offset=0, ctx=ctx
         )
         return logits[:, -1], cache
+
+    return prefill
+
+
+def make_bucketed_prefill_fn(cfg: tf.TransformerConfig, ctx: ShardingCtx = NULL_CTX):
+    """Prefill over a length-bucketed prompt: tokens (B, S_bucket) is the
+    prompt right-padded to a power-of-two bucket and ``last`` is the TRACED
+    index of the final real token, so one trace serves every prompt length in
+    the bucket.  Right padding is attention-valid under the causal mask: a
+    pad token at position p > last cannot influence logits at ``last``, and
+    pad rows written to the cache sit at positions >= the true length, which
+    decode masks out (kv_pos <= q_pos) and then overwrites in place.
+    """
+
+    def prefill(params, tokens, cache, last):
+        logits, cache, _ = tf.apply(
+            params, cfg, tokens, cache=cache, cache_offset=0, ctx=ctx
+        )
+        return jax.lax.dynamic_slice_in_dim(logits, last, 1, axis=1)[:, 0], cache
 
     return prefill
 
@@ -80,6 +100,7 @@ class ServeEngine:
         ctx: ShardingCtx = NULL_CTX,
         greedy: bool = True,
         seed: int = 0,
+        prefill_bucket_min: int = 16,
     ):
         self.cfg = cfg
         self.params = params
@@ -91,22 +112,39 @@ class ServeEngine:
         self.queue: list[Request] = []
         self.greedy = greedy
         self.rng = np.random.default_rng(seed)
-        self._prefill = jax.jit(make_prefill_fn(cfg, ctx))
+        self.prefill_bucket_min = prefill_bucket_min
+        self._prefill = jax.jit(make_bucketed_prefill_fn(cfg, ctx))
         self._decode = jax.jit(make_decode_fn(cfg, ctx))
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "completed": 0}
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "completed": 0,
+                      "prefill_traces": 0}
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def _prompt_bucket(self, length: int) -> int:
+        """Power-of-two length bucket, clamped to the cache extent, so the
+        jitted prefill compiles O(log max_seq) traces instead of one per
+        distinct prompt length."""
+        return min(max(next_pow2(length), self.prefill_bucket_min),
+                   max(self.max_seq, length))
 
     def _admit(self):
         for s in range(self.slots):
             if self.active[s] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[s] = req
-                # per-slot prefill: batch of 1 into this slot's cache rows
-                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                # per-slot prefill: batch of 1 into this slot's cache rows,
+                # prompt right-padded to its length bucket (causal-masked,
+                # so pad positions never leak into the last real logits)
+                L = len(req.prompt)
+                S_pad = self._prompt_bucket(L)
+                toks = np.zeros((1, S_pad), np.int32)
+                toks[0, :L] = req.prompt
                 slot_cache = jax.tree.map(lambda c: c[:, s: s + 1], self.cache)
-                logits, slot_cache = self._prefill(self.params, toks, slot_cache)
+                logits, slot_cache = self._prefill(
+                    self.params, jnp.asarray(toks), slot_cache,
+                    jnp.int32(L - 1),
+                )
                 self.cache = jax.tree.map(
                     lambda full, sl: full.at[:, s: s + 1].set(sl),
                     self.cache, slot_cache,
@@ -115,6 +153,7 @@ class ServeEngine:
                 tok = self._sample(np.asarray(logits)[0])
                 req.tokens_out.append(int(tok))
                 self.stats["prefill_tokens"] += len(req.prompt)
+                self.stats["prefill_traces"] = jit_cache_size(self._prefill)
 
     def _sample(self, logits: np.ndarray) -> int:
         if self.greedy:
@@ -205,6 +244,7 @@ class AnnFrontend:
         max_wait_ms: float = 2.0,
         ef: Optional[int] = None,
         clock: Callable[[], float] = time.perf_counter,
+        collect_stats: bool = False,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -214,12 +254,19 @@ class AnnFrontend:
         self.max_wait_s = max_wait_ms / 1e3
         self.ef = ef
         self.clock = clock
+        self.collect_stats = collect_stats
         self.pending: list[AnnRequest] = []
         self._uid = 0
         self.stats = {
             "submitted": 0, "completed": 0, "batches": 0,
             "full_batches": 0, "deadline_batches": 0, "forced_batches": 0,
+            "segments_visited": 0.0,
         }
+        # routing/trace stats of the most recent batch (collect_stats=True):
+        # perShardTopK, segments visited, and the process-wide beam_search
+        # trace counts — what an operator watches to confirm the serving
+        # trace set stays bounded under live traffic.
+        self.last_query_stats: Optional[dict] = None
 
     def submit(self, query: np.ndarray) -> AnnRequest:
         req = AnnRequest(self._uid, np.asarray(query, np.float32), self.clock())
@@ -254,9 +301,22 @@ class AnnFrontend:
     def mean_batch_size(self) -> float:
         return self.stats["completed"] / max(self.stats["batches"], 1)
 
+    @property
+    def mean_segments_visited(self) -> float:
+        return self.stats["segments_visited"] / max(self.stats["completed"], 1)
+
     def _execute(self, batch: list[AnnRequest], kind: str) -> list[AnnRequest]:
         q = np.stack([r.query for r in batch])
-        d, i = self.index.query(q, self.topk, ef=self.ef)
+        if self.collect_stats:
+            d, i, qstats = self.index.query(
+                q, self.topk, ef=self.ef, return_stats=True
+            )
+            self.last_query_stats = qstats
+            self.stats["segments_visited"] += (
+                qstats.get("mean_segments_visited", 0.0) * len(batch)
+            )
+        else:
+            d, i = self.index.query(q, self.topk, ef=self.ef)
         d, i = np.asarray(d), np.asarray(i)
         for j, r in enumerate(batch):
             r.dists, r.ids = d[j], i[j]

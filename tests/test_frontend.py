@@ -77,6 +77,21 @@ def test_results_match_direct_query(index_and_queries):
     assert np.allclose(got_d, np.asarray(want_d), equal_nan=True)
 
 
+def test_collect_stats_surfaces_routing(index_and_queries):
+    idx, queries = index_and_queries
+    clock = FakeClock()
+    fe = AnnFrontend(idx, topk=5, max_batch=8, max_wait_ms=1e9, clock=clock,
+                     collect_stats=True)
+    for q in queries[:8]:
+        fe.submit(q)
+    done = fe.step()
+    assert len(done) == 8
+    assert fe.last_query_stats is not None
+    assert fe.last_query_stats["per_shard_topk"] <= 5
+    assert "beam_traces" in fe.last_query_stats
+    assert 1.0 <= fe.mean_segments_visited <= idx.config.num_segments
+
+
 def test_flush_drains_everything(index_and_queries):
     idx, queries = index_and_queries
     clock = FakeClock()

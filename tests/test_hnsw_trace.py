@@ -1,0 +1,148 @@
+"""Device-resident HNSW serving: trace stability + stacked-search parity.
+
+The serving contract this file locks in:
+
+* the frozen graph uploads host->device once (cached pytree), never per call;
+* ``beam_search`` compilations are bounded by the power-of-two bucket count —
+  independent of how many partitions exist and which routed-subset sizes the
+  router produces;
+* the stacked multi-partition path is BIT-identical to the per-partition and
+  legacy (pre-device-resident) paths.
+"""
+
+import numpy as np
+import pytest
+
+from repro.common.utils import next_pow2_quarter
+from repro.core import LannsConfig, LannsIndex
+from repro.core.hnsw import (
+    HNSWConfig,
+    HNSWIndex,
+    beam_search,
+    beam_search_flat,
+    beam_search_stacked,
+)
+from repro.data.synthetic import clustered_vectors
+
+
+@pytest.fixture(scope="module")
+def hnsw_index():
+    data = clustered_vectors(3000, 16, n_clusters=32, seed=0)
+    queries = clustered_vectors(80, 16, n_clusters=32, seed=1)
+    cfg = LannsConfig(num_shards=2, num_segments=4, segmenter="apd",
+                      engine="hnsw", hnsw_m=8, ef_construction=50,
+                      ef_search=50)
+    return LannsIndex(cfg).build(data), queries
+
+
+def test_stacked_bit_identical_to_legacy_and_partition(hnsw_index):
+    idx, queries = hnsw_index
+    for B in (1, 7, 32, 80):
+        d_s, i_s = idx.query(queries[:B], 10)
+        d_l, i_l = idx.query(queries[:B], 10, hnsw_mode="legacy")
+        d_p, i_p = idx.query(queries[:B], 10, hnsw_mode="partition")
+        assert np.array_equal(i_s, i_l) and np.array_equal(d_s, d_l)
+        assert np.array_equal(i_s, i_p) and np.array_equal(d_s, d_p)
+
+
+def test_stacked_traces_bounded_in_batch_and_partitions(hnsw_index):
+    idx, queries = hnsw_index
+    idx.query(queries[:4], 10)  # warm the stack
+    before = beam_search_flat._cache_size()
+    sizes = (1, 2, 3, 5, 6, 7, 9, 11, 13, 30, 41, 63, 80)
+    for B in sizes:
+        idx.query(queries[:B], 10)
+    new = beam_search_flat._cache_size() - before
+    # routed-pair lane counts fold into quarter-pow2 buckets; the total
+    # routed count T <= B * m varies with B, so bound by the bucket count of
+    # the reachable lane range (T in [1, 80 * 4]) rather than per-B buckets.
+    max_lane_buckets = len(
+        {next_pow2_quarter(t) for t in range(1, 80 * 4 + 1)}
+    )
+    assert new <= max_lane_buckets, (new, max_lane_buckets)
+    # an index with a different partition count reuses the SAME flat traces
+    # when its lane counts fold into already-seen buckets — compilations
+    # never scale with partitions * sizes.
+    data = clustered_vectors(1200, 16, n_clusters=16, seed=3)
+    cfg2 = LannsConfig(num_shards=1, num_segments=2, segmenter="apd",
+                       engine="hnsw", hnsw_m=8, ef_construction=50,
+                       ef_search=50)
+    idx2 = LannsIndex(cfg2).build(data)
+    before2 = beam_search_flat._cache_size()
+    sizes2 = (1, 2, 3, 5, 9)
+    for B in sizes2:
+        idx2.query(queries[:B], 10)
+    assert beam_search_flat._cache_size() - before2 <= len(
+        {next_pow2_quarter(t) for t in range(1, 9 * 2 + 1)}
+    )
+
+
+def test_partition_mode_traces_shared_across_partitions(hnsw_index):
+    """Per-partition fallback: shared (n, L) corpus buckets + quarter-pow2
+    routed-batch buckets mean beam_search compiles once per DISTINCT bucket,
+    never once per (partition, window) pair."""
+    idx, queries = hnsw_index
+    windows = [(0, 64), (7, 64), (16, 64), (5, 48), (11, 48), (30, 50)]
+    idx.query(queries[:64], 10, hnsw_mode="partition")  # warm corpus upload
+    before = beam_search._cache_size()
+    buckets = set()
+    for lo, B in windows:
+        q = queries[lo: lo + B]
+        mask = idx.partitioner.route_queries(q)
+        for g in range(idx.config.num_segments):
+            c = int(mask[:, g].sum())
+            if c:
+                buckets.add(next_pow2_quarter(c))
+        idx.query(q, 10, hnsw_mode="partition")
+    new = beam_search._cache_size() - before
+    n_parts = len(idx.partitions)
+    assert new <= len(buckets), (new, buckets)
+    assert new < len(windows) * n_parts / 2, "traces must not scale with " \
+        "(windows x partitions)"
+
+
+def test_device_pytree_cached_across_calls(hnsw_index):
+    idx, _ = hnsw_index
+    part = next(p for p in idx.partitions.values() if p.kind == "hnsw")
+    a1 = part.frozen.device_arrays(2048, 4)
+    a2 = part.frozen.device_arrays(2048, 4)
+    assert a1 is a2, "device pytree must upload once, not per call"
+
+
+def test_padding_is_result_transparent():
+    """(n, L) padding must not change a single bit of the search output."""
+    data = clustered_vectors(700, 12, n_clusters=8, seed=5)
+    idx = HNSWIndex(HNSWConfig(M=8, ef_construction=50, ef_search=50), 12)
+    idx.add_batch(data)
+    fr = idx.freeze()
+    qs = clustered_vectors(9, 12, n_clusters=8, seed=6)
+    d0, i0 = fr.search(qs, 5)
+    d1, i1 = fr.search(qs, 5, n_pad=1024, l_pad=fr.num_upper_levels + 3)
+    assert np.array_equal(d0, d1) and np.array_equal(i0, i1)
+
+
+def test_stacked_standalone_matches_single():
+    """beam_search_stacked over P copies == P independent beam_search runs."""
+    data = clustered_vectors(500, 12, n_clusters=8, seed=7)
+    qs = clustered_vectors(8, 12, n_clusters=8, seed=8)
+    frs = []
+    for half in (data[:250], data[250:]):
+        h = HNSWIndex(HNSWConfig(M=8, ef_construction=40, ef_search=40), 12)
+        h.add_batch(half)
+        frs.append(h.freeze())
+    n_pad = 512
+    l_pad = max(f.num_upper_levels for f in frs)
+    import jax.numpy as jnp
+
+    stacked = {
+        key: jnp.stack([f.device_arrays(n_pad, l_pad)[key] for f in frs])
+        for key in ("vectors", "adj0", "upper_adj", "entry")
+    }
+    qj = jnp.asarray(np.stack([qs, qs]))
+    d_all, i_all = beam_search_stacked(
+        stacked, qj, k=4, ef=40, max_iters=56, metric="l2"
+    )
+    for pi, f in enumerate(frs):
+        d1, i1 = f.search(qs, 4, n_pad=n_pad, l_pad=l_pad)
+        assert np.array_equal(np.asarray(d_all)[pi], d1)
+        assert np.array_equal(np.asarray(i_all)[pi], i1)

@@ -123,6 +123,31 @@ def test_resumable_build(tmp_path, corpus):
     assert (i >= 0).all()
 
 
+@pytest.mark.parametrize("engine", ["scan", "hnsw"])
+def test_empty_query_batch(corpus, engine):
+    """Regression: B == 0 raised ValueError on segments_visited.max() (and
+    warned on .mean()); it must return well-formed (0, topk) outputs."""
+    data, _, _ = corpus
+    cfg = LannsConfig(num_shards=2, num_segments=2, segmenter="rh",
+                      engine=engine, hnsw_m=8, ef_construction=40,
+                      ef_search=40)
+    idx = LannsIndex(cfg).build(data[:1500])
+    empty = np.zeros((0, data.shape[1]), np.float32)
+    d, i, stats = idx.query(empty, 7, return_stats=True)
+    assert d.shape == (0, 7) and i.shape == (0, 7)
+    assert d.dtype == np.float32 and i.dtype == np.int64
+    assert stats["mean_segments_visited"] == 0.0
+    assert stats["max_segments_visited"] == 0
+    assert stats["per_shard_topk"] <= 7
+    # same stats schema as a non-empty batch (dashboards index these keys)
+    _, _, full_stats = idx.query(data[:3], 7, return_stats=True)
+    assert set(stats) == set(full_stats)
+    d2, i2 = idx.query(empty, 7)
+    assert d2.shape == (0, 7) and i2.shape == (0, 7)
+    with pytest.raises(ValueError, match="hnsw_mode"):
+        idx.query(data[:2], 7, hnsw_mode="staked")
+
+
 def test_query_stats(corpus):
     data, queries, _ = corpus
     cfg = LannsConfig(num_shards=2, num_segments=4, segmenter="rh", engine="scan")

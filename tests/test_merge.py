@@ -9,6 +9,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (
     merge_topk,
     merge_topk_np,
+    merge_topk_scatter,
     merge_topk_vec,
     per_shard_topk,
     two_level_merge_np,
@@ -128,6 +129,43 @@ def test_property_merge_vec_parity(seed, C, k, dup_frac, inf_frac):
     vd, vi = merge_topk_vec(d, ids, k)
     assert np.array_equal(ri, vi)
     assert np.array_equal(rd, vd)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2**32 - 1),
+    st.integers(min_value=1, max_value=48),
+    st.integers(min_value=1, max_value=24),
+    st.floats(min_value=0.0, max_value=0.6),
+    st.floats(min_value=0.0, max_value=0.4),
+)
+def test_property_merge_jit_parity(seed, C, k, dup_frac, inf_frac):
+    """The jitted two-lexsort merge_topk == merge_topk_np on the same
+    adversarial candidate lists as the vec parity test: duplicate ids,
+    -1 ids, ±inf distances, tied distances, and k > C."""
+    rng = np.random.default_rng(seed)
+    R = 4
+    id_hi = max(int(C * (1.0 - dup_frac)), 1)
+    ids = rng.integers(-1, id_hi, (R, C)).astype(np.int64)
+    d = (rng.integers(0, 8, (R, C)) / 4.0).astype(np.float32)
+    d[rng.random((R, C)) < inf_frac] = np.inf
+    d[rng.random((R, C)) < inf_frac / 2] = -np.inf
+    rd, ri = merge_topk_np(d, ids, k)
+    jd, ji = merge_topk(d, ids, k)
+    assert np.array_equal(ri, np.asarray(ji))
+    assert np.array_equal(rd, np.asarray(jd))
+
+
+def test_merge_scatter_baseline_still_matches():
+    """The retired scatter-min form stays a valid oracle on distinct dists
+    (it is the benchmark baseline for the lexsort port)."""
+    rng = np.random.default_rng(5)
+    d = rng.standard_normal((6, 40)).astype(np.float32)
+    i = rng.integers(0, 25, (6, 40)).astype(np.int32)
+    od, oi = merge_topk_np(d, i.astype(np.int64), 10)
+    sd, si = merge_topk_scatter(d, i, 10)
+    assert np.allclose(od, np.asarray(sd), rtol=1e-6)
+    assert np.array_equal(oi, np.asarray(si).astype(np.int64))
 
 
 def test_two_level_merge_respects_pstk():

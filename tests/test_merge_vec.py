@@ -118,3 +118,46 @@ def test_int32_ids_dtype_preserved():
     vd, vi = merge_topk_vec(d, i, 4)
     assert vi.dtype == np.int32 and vd.dtype == np.float32
     _assert_parity(d, i, 4)
+
+
+# ---------------------------------------------------------------------------
+# jitted (jnp) merge_topk — same two-lexsort formulation, same parity bar
+# ---------------------------------------------------------------------------
+
+
+def _assert_jit_parity(d, i, k):
+    from repro.core.merge import merge_topk
+
+    rd, ri = merge_topk_np(d, i, k)
+    jd, ji = merge_topk(d, i, k)
+    assert np.array_equal(ri, np.asarray(ji).astype(i.dtype)), (ri, ji)
+    assert np.array_equal(rd, np.asarray(jd)), (rd, jd)
+
+
+def test_jit_dedups_sorts_and_pads():
+    d = np.array([[3.0, 1.0, 2.0, 1.0, np.inf]], np.float32)
+    i = np.array([[7, 3, 9, 3, -1]], np.int64)
+    _assert_jit_parity(d, i, 3)
+    _assert_jit_parity(d, i, 8)  # k > C pads with (inf, -1)
+
+
+def test_jit_randomized_adversarial_sweep():
+    rng = np.random.default_rng(123)
+    for _ in range(40):
+        C = int(rng.integers(1, 48))
+        k = int(rng.integers(1, 24))
+        R = 4
+        ids = rng.integers(-1, max(int(C * 0.7), 1), (R, C)).astype(np.int64)
+        d = (rng.integers(0, 8, (R, C)) / 4.0).astype(np.float32)
+        d[rng.random((R, C)) < 0.2] = np.inf
+        d[rng.random((R, C)) < 0.1] = -np.inf
+        _assert_jit_parity(d, ids, k)
+
+
+def test_jit_matches_vec_on_executor_shapes():
+    """The exact shapes LannsIndex.query feeds the merges."""
+    rng = np.random.default_rng(7)
+    B, S, routes, pstk = 6, 2, 3, 5
+    d = rng.standard_normal((B * S, routes * pstk)).astype(np.float32)
+    i = rng.integers(0, 40, (B * S, routes * pstk)).astype(np.int64)
+    _assert_jit_parity(d, i, pstk)

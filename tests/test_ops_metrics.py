@@ -59,3 +59,40 @@ def test_ip_on_prenormalized_equals_cos():
     d_cos, i_cos = ops.distance_topk(q, x, 6, "cos", backend="jnp")
     assert np.array_equal(np.asarray(i_ip), np.asarray(i_cos))
     assert np.allclose(np.asarray(d_ip), np.asarray(d_cos), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# empty-corpus handling (N == 0 used to recurse into the blocked scan k=0)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_corpus_jnp():
+    q = np.zeros((3, 8), np.float32)
+    x = np.zeros((0, 8), np.float32)
+    d, i = ops.distance_topk(q, x, 5, "l2", backend="jnp")
+    assert np.asarray(d).shape == (3, 5) and np.asarray(i).shape == (3, 5)
+    assert np.all(np.isinf(np.asarray(d)))
+    assert np.all(np.asarray(i) == -1)
+
+
+def test_empty_corpus_pallas_interpret():
+    q = np.zeros((2, 16), np.float32)
+    x = np.zeros((0, 16), np.float32)
+    d, i = ops.distance_topk(q, x, 7, "ip", backend="pallas_interpret")
+    assert np.all(np.isinf(np.asarray(d))) and np.all(np.asarray(i) == -1)
+
+
+def test_empty_partition_search_both_engines():
+    """An empty (shard, segment) partition serves (inf, -1) for any batch,
+    whichever engine the config names."""
+    from repro.core.lanns import LannsConfig, _Partition
+
+    for engine in ("scan", "hnsw"):
+        cfg = LannsConfig(engine=engine)
+        part = _Partition(
+            {"kind": "scan", "vectors": np.zeros((0, 8), np.float32),
+             "keys": np.zeros((0,), np.int64)},
+            cfg,
+        )
+        d, i = part.search(np.zeros((4, 8), np.float32), 3)
+        assert d.shape == (4, 3) and np.all(np.isinf(d)) and np.all(i == -1)

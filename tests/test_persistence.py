@@ -58,6 +58,41 @@ def test_mips_query_without_build_raises_cleanly(small_world):
         idx.query(queries, 5)
 
 
+def test_legacy_ragged_artifact_loads(tmp_path, small_world):
+    """Pre-stacked artifacts stored ragged per-level lists (level_nodes /
+    level_adj / level_loc); loading one must rebuild the (L, n, M) stack and
+    answer queries identically."""
+    data, queries = small_world
+    cfg = LannsConfig(num_shards=1, num_segments=2, segmenter="rh",
+                      engine="hnsw", hnsw_m=8, ef_construction=40,
+                      ef_search=40)
+    idx = LannsIndex(cfg).build(data)
+    d1, i1 = idx.query(queries, 10)
+    root = str(tmp_path / "legacy")
+    for (s, g), part in idx.partitions.items():
+        fr = part.frozen
+        payload = {"kind": "hnsw", "vectors": fr.vectors, "levels": fr.levels,
+                   "adj0": fr.adj0, "entry": fr.entry, "keys": fr.keys}
+        level_nodes, level_adj, level_loc = [], [], []
+        for l in range(fr.num_upper_levels):
+            nodes = np.nonzero(fr.levels >= l + 1)[0].astype(np.int32)
+            loc = np.full(fr.size, -1, np.int32)
+            loc[nodes] = np.arange(len(nodes), dtype=np.int32)
+            level_nodes.append(nodes)
+            level_adj.append(fr.upper_adj[l][nodes])
+            level_loc.append(loc)
+        payload.update(level_nodes=level_nodes, level_adj=level_adj,
+                       level_loc=level_loc)
+        idx._save_partition(root, s, g, payload)
+    idx2 = LannsIndex(cfg)
+    idx2.partitioner = idx.partitioner
+    for (s, g) in idx.partitions:
+        idx2.partitions[(s, g)] = idx2._load_partition(root, s, g)
+    d2, i2 = idx2.query(queries, 10)
+    assert np.array_equal(i1, i2)
+    assert np.allclose(d1, d2, rtol=1e-6, equal_nan=True)
+
+
 @pytest.mark.parametrize("engine", ["scan", "hnsw"])
 def test_resume_dir_roundtrip(tmp_path, small_world, engine):
     """A build checkpointed into resume_dir resumes to identical results."""
