@@ -11,7 +11,10 @@ Single-node serving sim, three views of the same batched query executor:
   HNSW engine in 'legacy' mode (graph re-uploaded host->device per call,
   beam_search retraced per routed-subset size: the pre-device-resident
   serving path) vs the default stacked device-resident mode, with a
-  bit-identity check (the speedup must cost zero recall).
+  bit-identity check (the speedup must cost zero recall);
+* quantized scan before/after — the fp32 scan path vs the two-stage q8 path
+  (int8 candidate scan + exact re-rank) at the same B/k, with relative
+  recall and the resident bytes-per-vector of each corpus.
 
 ``--smoke`` shrinks corpus/duration for CI wiring checks.
 """
@@ -23,7 +26,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, sift_like_corpus
+from benchmarks.common import emit, quantized_scan_compare, sift_like_corpus
 from repro.core import LannsConfig, LannsIndex
 from repro.serve.engine import AnnFrontend
 
@@ -149,6 +152,12 @@ def run(n=16_000, d=64, topk=100, duration_s=3.0, n_hnsw=12_000):
     run_offline(idx, queries, topk, duration_s)
     run_frontend(idx, queries, topk, duration_s)
     run_hnsw_compare(corpus[:n_hnsw], queries, topk, duration_s)
+    # quantized leg: fp32 scan vs two-stage q8 (shared harness with
+    # bench_recall --quantized — one protocol, one memory accounting)
+    quantized_scan_compare(
+        corpus, queries, topk, 1024, prefix="online_qps",
+        duration_s=2 * duration_s,
+    )
 
 
 def run_smoke():

@@ -1,13 +1,34 @@
 """Paper Tables 1 & 4: recall of (n, m)-partitioned LANNS vs monolithic HNSW.
 
 Reduced-scale protocol (SIFT64-20k): same methods, same (1,8)/(2,4)
-partitionings, same alpha=0.15, topK=100, R@{1,5,10,15,50,100}."""
+partitionings, same alpha=0.15, topK=100, R@{1,5,10,15,50,100}.
+
+``--quantized`` runs the two-stage q8 acceptance protocol instead: the fp32
+jnp scan path vs the quantized scan (int8 candidates + exact re-rank) at
+B=1024/k=100 — QPS, recall@k against ground truth AND relative to fp32, and
+the resident bytes-per-vector of each corpus, so the memory win is a
+tracked number next to the throughput win.
+"""
 
 from __future__ import annotations
 
+import argparse
 
-from benchmarks.common import emit, ground_truth, sift_like_corpus, time_call
-from repro.core import HNSWConfig, HNSWIndex, LannsConfig, LannsIndex, recall_table
+from benchmarks.common import (
+    emit,
+    ground_truth,
+    quantized_scan_compare,
+    sift_like_corpus,
+    time_call,
+)
+from repro.core import (
+    HNSWConfig,
+    HNSWIndex,
+    LannsConfig,
+    LannsIndex,
+    recall_at_k,
+    recall_table,
+)
 
 KS = (1, 5, 10, 15, 50, 100)
 
@@ -51,5 +72,39 @@ def run(n=20_000, d=64, n_queries=300, topk=100, engine="scan"):
     return results
 
 
+def run_quantized(n=20_000, d=64, batch=1024, topk=100, smoke=False):
+    """q8 two-stage vs fp32 scan: QPS, recall, resident bytes-per-vector.
+
+    The acceptance protocol rides the shared harness in benchmarks/common.py
+    (same one the bench_online_qps quantized leg uses); this entry point
+    adds the ground-truth recall columns.
+    """
+    if smoke:
+        n, batch, topk = 3000, 256, 20
+    corpus, queries = sift_like_corpus(n, d, max(batch, 1024), seed=31)
+    td, ti = ground_truth(corpus, queries, topk)
+    stats = quantized_scan_compare(
+        corpus, queries, topk, batch, prefix="quantized"
+    )
+    r_fp = recall_at_k(stats["ids_fp32"], ti[: len(stats["ids_fp32"])], topk)
+    r_q8 = recall_at_k(stats["ids_q8"], ti[: len(stats["ids_q8"])], topk)
+    emit(
+        f"quantized.truth_recall_b{batch}",
+        0.0,
+        f"R@{topk}_fp32={r_fp:.4f};R@{topk}_q8={r_q8:.4f}",
+    )
+    stats.update(recall_fp32=r_fp, recall_q8=r_q8)
+    return stats
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quantized", action="store_true",
+                    help="two-stage q8 vs fp32 scan acceptance protocol")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpus (CI wiring check)")
+    args = ap.parse_args()
+    if args.quantized:
+        run_quantized(smoke=args.smoke)
+    else:
+        run()

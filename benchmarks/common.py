@@ -44,3 +44,88 @@ def time_call(fn, *args, repeats=3, **kw):
         out = fn(*args, **kw)
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts)), out
+
+
+def quantized_scan_compare(
+    corpus,
+    queries,
+    topk: int,
+    batch: int,
+    *,
+    prefix: str,
+    reps: int = 9,
+    duration_s: float | None = None,
+):
+    """fp32 scan vs two-stage q8 scan: interleaved QPS, recall, memory.
+
+    The shared harness behind ``bench_recall --quantized`` and the
+    ``bench_online_qps`` quantized leg (one protocol, one bytes-per-vector
+    accounting).  Builds both indexes from the same base config, ALTERNATES
+    between the contenders every rep so machine noise hits them equally
+    (the emitted speedup is the acceptance metric), and reports recall of
+    q8 both against ground truth (caller's job) and RELATIVE to the fp32
+    results, plus the resident scan bytes-per-vector — the ~4x memory win
+    that lets 4x more segments fit device-resident.
+
+    Runs ``reps`` alternating batches, or as many as fit in ``duration_s``
+    seconds when given.  QPS uses the MINIMUM latency over reps (timeit's
+    recommendation: on a shared machine, noise is strictly additive, so the
+    minimum is the most reproducible estimate of true cost — and it is
+    taken under identical interleaved conditions for both contenders).
+    Returns a stats dict for programmatic use.
+    """
+    from repro.core import LannsConfig, LannsIndex, recall_at_k
+
+    base = dict(num_shards=1, num_segments=8, segmenter="apd",
+                engine="scan", alpha=0.15)
+    idx_fp = LannsIndex(LannsConfig(**base)).build(corpus)
+    idx_q8 = LannsIndex(LannsConfig(**base, quantized="q8")).build(corpus)
+    n_pool = len(queries)
+    batch = min(batch, n_pool)
+    d_fp, i_fp = idx_fp.query(queries[:batch], topk)  # also warms caches
+    d_q8, i_q8 = idx_q8.query(queries[:batch], topk)
+    rel = recall_at_k(i_q8, i_fp, topk)
+    lat = {"fp32": [], "q8": []}
+    qi = 13
+    t_end = (
+        time.perf_counter() + duration_s if duration_s is not None else None
+    )
+    rep = 0
+    while (rep < reps) if t_end is None else (time.perf_counter() < t_end):
+        lo = qi % (n_pool - batch + 1)
+        qs = queries[lo: lo + batch]
+        for name, idx in (("fp32", idx_fp), ("q8", idx_q8)):
+            t0 = time.perf_counter()
+            idx.query(qs, topk)
+            lat[name].append(time.perf_counter() - t0)
+        qi += 131
+        rep += 1
+    med = {name: float(np.min(ts)) for name, ts in lat.items()}
+    qps = {name: batch / m for name, m in med.items()}
+    ex8 = idx_q8._q8_executor()
+    n_total = sum(p.size for p in idx_q8.partitions.values())
+    bpv_q8 = ex8.resident_bytes() / max(n_total, 1)
+    bpv_fp = 4.0 * corpus.shape[1]
+    emit(
+        f"{prefix}.fp32_scan_b{batch}",
+        1e6 * med["fp32"] / batch,
+        f"qps={qps['fp32']:.0f}",
+    )
+    emit(
+        f"{prefix}.q8_scan_b{batch}",
+        1e6 * med["q8"] / batch,
+        f"qps={qps['q8']:.0f};rel_recall@{topk}={rel:.4f};"
+        f"speedup={qps['q8'] / qps['fp32']:.2f}x",
+    )
+    emit(
+        f"{prefix}.q8_memory",
+        0.0,
+        f"bytes_per_vec_q8={bpv_q8:.1f};bytes_per_vec_fp32={bpv_fp:.0f};"
+        f"shrink={bpv_fp / bpv_q8:.2f}x;"
+        f"resident_q8_mb={ex8.resident_bytes() / 2**20:.1f};"
+        f"exact_store_mb={ex8.exact_store_bytes() / 2**20:.1f}",
+    )
+    return {
+        "qps_fp32": qps["fp32"], "qps_q8": qps["q8"], "rel_recall": rel,
+        "bytes_per_vec_q8": bpv_q8, "ids_fp32": i_fp, "ids_q8": i_q8,
+    }

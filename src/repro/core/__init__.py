@@ -10,6 +10,7 @@ from repro.core.hnsw import HNSWConfig, HNSWIndex, FrozenHNSW
 from repro.core.lanns import LannsConfig, LannsIndex
 from repro.core.merge import (
     merge_topk,
+    merge_topk_disjoint_np,
     merge_topk_np,
     merge_topk_scatter,
     merge_topk_vec,
@@ -43,6 +44,7 @@ __all__ = [
     "hash_shard",
     "make_segmenter",
     "merge_topk",
+    "merge_topk_disjoint_np",
     "merge_topk_np",
     "merge_topk_scatter",
     "merge_topk_vec",

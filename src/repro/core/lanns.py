@@ -39,7 +39,11 @@ from repro.common.utils import (
     next_pow2_quarter,
 )
 from repro.core.hnsw import HNSWConfig, HNSWIndex
-from repro.core.merge import merge_topk_vec, per_shard_topk
+from repro.core.merge import (
+    merge_topk_disjoint_np,
+    merge_topk_vec,
+    per_shard_topk,
+)
 from repro.core.segmenter import SegmenterConfig
 from repro.core.sharding import TwoLevelPartitioner
 from repro.kernels import ops
@@ -55,6 +59,14 @@ class LannsConfig:
     product into L2 NN — which is what hyperplane segmenters route well
     (raw-IP routing loses the norm component entirely).  Returned distances
     are converted back to inner products (negated, lower-is-better).
+
+    quantized: 'none' | 'q8' — 'q8' serves scan partitions through the
+    two-stage path (int8 candidate scan + exact fp32 re-rank of
+    ``rerank_factor * perShardTopK`` candidates per routed lane), cutting
+    the resident scan corpus ~4x with near-identical recall.
+    rerank_store: where the exact fp32 originals live for stage 2 —
+    'host' (numpy / mmap-friendly), 'device', or 'auto' (host on CPU,
+    device on TPU).
     """
 
     num_shards: int = 1
@@ -70,6 +82,9 @@ class LannsConfig:
     topk_confidence: float = 0.95
     seed: int = 0
     segmenter_sample: int = 250_000
+    quantized: str = "none"  # 'none' | 'q8'
+    rerank_factor: int = 2
+    rerank_store: str = "auto"  # 'auto' | 'host' | 'device'
 
     def segmenter_config(self) -> SegmenterConfig:
         return SegmenterConfig(
@@ -113,13 +128,21 @@ def _build_one_partition(args):
     return s, g, payload, time.perf_counter() - t0
 
 
-def _batched_scan_topk(queries: np.ndarray, vectors: np.ndarray, k: int, metric: str):
+def _batched_scan_topk(
+    queries: np.ndarray,
+    vectors: np.ndarray,
+    k: int,
+    metric: str,
+    n_valid: Optional[int] = None,
+):
     """One fused distance+top-k call over a routed query batch.
 
     Goes through ``ops.distance_topk`` (Pallas kernel on TPU, blocked jnp
-    scan elsewhere).  The batch is padded to the next power of two so the
-    executor's per-(shard, segment) calls reuse a bounded set of jit traces
-    instead of retracing for every routed-subset size.
+    scan elsewhere).  The batch is padded to the next power of two AND the
+    corpus arrives padded to a shared pow2 size bucket (``n_valid`` real
+    rows), so the executor's per-(shard, segment) calls reuse a bounded set
+    of jit traces — O(log B x log N buckets) — instead of retracing for
+    every (routed-subset size, partition size) pair.
     """
     B, D = queries.shape
     B_pad = next_pow2(B)
@@ -127,7 +150,7 @@ def _batched_scan_topk(queries: np.ndarray, vectors: np.ndarray, k: int, metric:
     if B_pad != B:
         qp = np.zeros((B_pad, D), np.float32)
         qp[:B] = queries
-    d, i = ops.distance_topk(qp, vectors, k, metric)
+    d, i = ops.distance_topk(qp, vectors, k, metric, n_valid=n_valid)
     return np.asarray(d)[:B], np.asarray(i)[:B].astype(np.int64)
 
 
@@ -139,6 +162,8 @@ class _Partition:
         self.config = config
         self.keys = payload.get("keys")
         self.vectors = payload["vectors"]
+        self._scan_pad = None  # lazily bucketed scan corpus (pow2 rows)
+        self.q8 = None
         if self.kind == "hnsw":
             from repro.core.hnsw import FrozenHNSW
 
@@ -151,10 +176,48 @@ class _Partition:
                 entry=int(payload["entry"]),
                 keys=payload.get("keys"),
             )
+        elif config.quantized == "q8" and self.size > 0:
+            from repro.quant.codec import Q8Corpus, quantize_q8
+
+            q8_metric = "l2" if config.metric == "mips" else config.metric
+            if payload.get("q8_codes") is not None:
+                self.q8 = Q8Corpus(
+                    codes=payload["q8_codes"],
+                    scales=payload["q8_scales"],
+                    norms2=payload["q8_norms2"],
+                    metric=q8_metric,
+                )
+            else:
+                # legacy fp32 artifact (or fresh build): quantization is
+                # deterministic, so encoding here == encoding at save time.
+                self.q8 = quantize_q8(self.vectors, q8_metric)
 
     @property
     def size(self):
         return 0 if self.vectors is None else len(self.vectors)
+
+    def scan_corpus(self):
+        """Scan corpus padded to its quarter-pow2 size bucket (cached).
+
+        Shared buckets mean ``distance_topk`` traces are reused ACROSS
+        segments; padding rows are masked via n_valid, so results are
+        bit-identical to scanning the raw corpus.  Quarter-pow2 steps (the
+        same grid the HNSW lanes and q8 codes use) cap the padded-copy and
+        padded-gemm waste at 25% while keeping the trace count logarithmic.
+        """
+        if self._scan_pad is None:
+            n_pad = next_pow2_quarter(self.size)
+            if n_pad == self.size:
+                self._scan_pad = self.vectors
+            else:
+                pad = np.zeros((n_pad, self.vectors.shape[1]), np.float32)
+                pad[: self.size] = self.vectors
+                self._scan_pad = pad
+                # drop the unpadded copy: the view keeps every other use
+                # (save, re-rank stores) working, so the only extra resident
+                # bytes are the <=25% padding rows.
+                self.vectors = pad[: self.size]
+        return self._scan_pad
 
     def search(
         self,
@@ -192,7 +255,10 @@ class _Partition:
             metric = (
                 "l2" if self.config.metric == "mips" else self.config.metric
             )
-            d, i = _batched_scan_topk(queries, self.vectors, k_eff, metric)
+            d, i = _batched_scan_topk(
+                queries, self.scan_corpus(), k_eff, metric,
+                n_valid=self.size,
+            )
             if self.keys is not None:
                 i = np.where(i >= 0, self.keys[np.clip(i, 0, None)], -1)
         if k_eff < k:
@@ -207,6 +273,20 @@ class LannsIndex:
     """End-to-end LANNS index: fit -> build -> query (+ save/load/resume)."""
 
     def __init__(self, config: LannsConfig):
+        if config.quantized not in ("none", "q8"):
+            raise ValueError(
+                f"quantized={config.quantized!r} — expected 'none' or 'q8'"
+            )
+        if config.quantized == "q8" and config.engine != "scan":
+            raise ValueError(
+                "quantized='q8' requires engine='scan' (quantized HNSW "
+                "beams are a ROADMAP follow-on)"
+            )
+        if config.rerank_store not in ("auto", "host", "device"):
+            raise ValueError(
+                f"rerank_store={config.rerank_store!r} — expected 'auto', "
+                "'host' or 'device'"
+            )
         self.config = config
         self.partitioner = TwoLevelPartitioner(
             config.num_shards, config.segmenter_config()
@@ -214,11 +294,38 @@ class LannsIndex:
         self.partitions: dict[tuple, _Partition] = {}
         self.build_stats: dict = {}
         self._stack = None  # lazily-built stacked HNSW device pytree
+        self._q8_exec = None  # lazily-built two-stage quantized executor
 
     # -- stacked HNSW serving state -------------------------------------------
 
     def _invalidate_stack(self):
         self._stack = None
+        self._q8_exec = None
+
+    def _q8_executor(self):
+        """Two-stage quantized scan executor over every non-empty scan
+        partition (device codes upload once, cached like the HNSW stack)."""
+        if self._q8_exec is None:
+            from repro.quant.twostage import (
+                QuantizedScanExecutor,
+                _Q8Partition,
+            )
+
+            metric = (
+                "l2" if self.config.metric == "mips" else self.config.metric
+            )
+            parts = {
+                sg: _Q8Partition(p.q8, p.vectors, p.keys, metric)
+                for sg, p in sorted(self.partitions.items())
+                if p.kind == "scan" and p.size > 0 and p.q8 is not None
+            }
+            self._q8_exec = QuantizedScanExecutor(
+                parts,
+                metric,
+                self.config.rerank_factor,
+                self.config.rerank_store,
+            )
+        return self._q8_exec
 
     def _hnsw_parts(self):
         """Servable HNSW partitions, sorted by (shard, segment).
@@ -435,14 +542,32 @@ class LannsIndex:
         # slot[b, g]: position of segment g among query b's routed segments.
         slot = np.cumsum(seg_mask, axis=1) - 1
         max_routes = max(int(segments_visited.max()), 1)
-        cand_d = np.full((B, S, max_routes, pstk), np.inf, np.float32)
-        cand_i = np.full((B, S, max_routes, pstk), -1, np.int64)
+        # virtual spill stores each point in exactly ONE (shard, segment), so
+        # with the q8 scan engine (all partitions two-stage) candidate ids
+        # are disjoint across lanes: the lexsort dedup of merge_topk_vec is
+        # unnecessary and lanes can stay candidate-wide (rerank_factor *
+        # pstk exactly-scored rows each) for one dedup-free partial sort.
+        q8_fast = cfg.quantized == "q8" and cfg.spill == "virtual"
+        lane_w = pstk
+        if q8_fast:
+            lane_w = min(
+                cfg.rerank_factor * pstk,
+                max((p.size for p in self.partitions.values()), default=pstk),
+            )
+            lane_w = max(lane_w, pstk)
+        cand_d = np.full((B, S, max_routes, lane_w), np.inf, np.float32)
+        cand_i = np.full((B, S, max_routes, lane_w), -1, np.int64)
         # routed query subset per segment — shared by every shard's (s, g)
         # partition, so compute it once.
         sels = [np.nonzero(seg_mask[:, g])[0] for g in range(cfg.num_segments)]
         handled = self._query_hnsw_stacked(
             queries, sels, slot, cand_d, cand_i, pstk, ef
         ) if hnsw_mode == "stacked" else set()
+        if cfg.quantized == "q8":
+            handled |= self._q8_executor().run(
+                queries, sels, slot, cand_d, cand_i, pstk,
+                lane_width=lane_w,
+            )
         n_pad = l_pad = None
         if hnsw_mode == "partition":
             n_pad, l_pad = self._hnsw_pads()
@@ -464,19 +589,41 @@ class LannsIndex:
                     q_sel, pstk, ef=ef, n_pad=n_pad, l_pad=l_pad,
                     legacy=(hnsw_mode == "legacy"),
                 )
-                cand_d[sel, s, sl] = d
-                cand_i[sel, s, sl] = i
-        # level-1: segment merge inside each shard, all (query, shard) rows
-        # in one vectorized call.
-        shard_d, shard_i = merge_topk_vec(
-            cand_d.reshape(B * S, max_routes * pstk),
-            cand_i.reshape(B * S, max_routes * pstk),
-            pstk,
-        )
-        # level-2: broker merge over shards.
-        out_d, out_i = merge_topk_vec(
-            shard_d.reshape(B, S * pstk), shard_i.reshape(B, S * pstk), topk
-        )
+                cand_d[sel, s, sl, :pstk] = d
+                cand_i[sel, s, sl, :pstk] = i
+        if q8_fast and handled >= {
+            sg for sg, p in self.partitions.items() if p.size > 0
+        }:
+            # dedup-free merge over every exactly-scored candidate (a
+            # superset of what perShardTopK trimming would forward, so
+            # recall can only improve); physical spill (duplicate ids)
+            # takes the merge_topk_vec branch below instead.
+            out_d, out_i = merge_topk_disjoint_np(
+                cand_d.reshape(B, S * max_routes * lane_w),
+                cand_i.reshape(B, S * max_routes * lane_w),
+                topk,
+            )
+        else:
+            # level-1: segment merge inside each shard, all (query, shard)
+            # rows in one vectorized call.
+            shard_d, shard_i = merge_topk_vec(
+                cand_d.reshape(B * S, max_routes * lane_w),
+                cand_i.reshape(B * S, max_routes * lane_w),
+                pstk,
+            )
+            # level-2: broker merge over shards.
+            out_d, out_i = merge_topk_vec(
+                shard_d.reshape(B, S * pstk), shard_i.reshape(B, S * pstk),
+                topk,
+            )
+        if cfg.quantized == "q8" and cfg.metric in ("l2", "mips"):
+            # the q8 executor's lane distances omit the per-query ||q||^2
+            # constant (it cannot change any within-query ordering); restore
+            # true squared distances with one (B, topk) add.
+            qn8 = np.einsum("bd,bd->b", queries, queries)
+            out_d = np.where(
+                np.isfinite(out_d), out_d + qn8[:, None], out_d
+            )
         if cfg.metric == "mips":
             # convert augmented-L2 distances back to (negated) inner products:
             # d^2 = M^2 + |q|^2 - 2<q, x>  =>  -<q, x> = (d^2 - M^2 - |q|^2)/2
@@ -496,6 +643,9 @@ class LannsIndex:
         batches (dashboards index these keys unconditionally)."""
         from repro.core import hnsw as hnsw_mod
 
+        from repro.kernels import ref as ref_mod
+        from repro.quant import twostage as q8_mod
+
         empty = segments_visited.size == 0
         return {
             "per_shard_topk": pstk,
@@ -503,10 +653,12 @@ class LannsIndex:
                 0.0 if empty else float(segments_visited.mean()),
             "max_segments_visited":
                 0 if empty else int(segments_visited.max()),
-            # process-wide beam_search trace counts: serving dashboards
-            # watch these to confirm the trace set stays bounded.
+            # process-wide trace counts: serving dashboards watch these to
+            # confirm the trace set stays bounded.
             "beam_traces": jit_cache_size(hnsw_mod.beam_search),
             "beam_traces_flat": jit_cache_size(hnsw_mod.beam_search_flat),
+            "scan_traces": jit_cache_size(ref_mod.distance_topk_blocked),
+            "scan_traces_q8": jit_cache_size(q8_mod._stage1_scores),
         }
 
     def _query_hnsw_stacked(self, queries, sels, slot, cand_d, cand_i, pstk, ef):
@@ -656,10 +808,23 @@ class LannsIndex:
                         levels=fr.levels, adj0=fr.adj0, entry=fr.entry,
                         upper_adj=fr.upper_adj,
                     )
+                if part.q8 is not None:
+                    # quantized payload: int8 codes + per-dim scales +
+                    # per-vector norm corrections; the fp32 ``vectors``
+                    # above double as the exact re-rank store.
+                    payload.update(
+                        q8_codes=part.q8.codes,
+                        q8_scales=part.q8.scales,
+                        q8_norms2=part.q8.norms2,
+                    )
                 self._save_partition(root, s, g, payload)
         seg = self.partitioner.segmenter
         tree = seg.tree_arrays()
         manifest = {
+            # v2 adds the optional q8_* quantized arrays per partition (and
+            # the quantized/rerank_* config knobs); v1 artifacts load
+            # unchanged — absent fields fall back to fp32 behaviour.
+            "format_version": 2,
             "config": dataclasses.asdict(self.config),
             "partitions": sorted([f"{s}/{g}" for s, g in self.partitions]),
             "build_stats": {
@@ -682,6 +847,12 @@ class LannsIndex:
     def load(cls, root: str) -> "LannsIndex":
         with open(os.path.join(root, "manifest.json")) as f:
             manifest = json.load(f)
+        version = int(manifest.get("format_version", 1))
+        if version > 2:
+            raise ValueError(
+                f"artifact format_version={version} is newer than this "
+                "build understands (max 2)"
+            )
         config = LannsConfig(**manifest["config"])
         index = cls(config)
         if manifest.get("mips_M2") is not None:

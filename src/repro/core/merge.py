@@ -222,6 +222,35 @@ def merge_topk_vec(dists: np.ndarray, ids: np.ndarray, k: int):
     return out_d.reshape(*lead, k), out_i.reshape(*lead, k)
 
 
+def merge_topk_disjoint_np(dists: np.ndarray, ids: np.ndarray, k: int):
+    """Dedup-FREE top-k merge: one introselect + one partial sort per row.
+
+    Valid only when candidate ids are disjoint across the merged lists — in
+    LANNS that is exactly virtual spill, where every point lives in one
+    (shard, segment) — so the O(C log C) lexsort-dedup of
+    ``merge_topk_vec`` degenerates to selection.  The quantized two-stage
+    executor merges its exact per-lane results through this path.  Same
+    output contract: ascending by distance, (+inf, -1) padding.  Tie ORDER
+    among equal distances may differ from ``merge_topk_vec`` (which
+    tie-breaks by id); with distinct distances the outputs are identical
+    (asserted in tests/test_merge_vec.py).
+    """
+    *lead, C = dists.shape
+    d2 = dists.reshape(-1, C)
+    i2 = np.where(np.isinf(d2), -1, ids.reshape(-1, C))
+    kk = min(k, C)
+    if kk < C:
+        sel = np.argpartition(d2, kk - 1, axis=1)[:, :kk]
+        d2 = np.take_along_axis(d2, sel, axis=1)
+        i2 = np.take_along_axis(i2, sel, axis=1)
+    order = np.argsort(d2, axis=1, kind="stable")
+    out_d = np.full((d2.shape[0], k), np.inf, dtype=dists.dtype)
+    out_i = np.full((d2.shape[0], k), -1, dtype=ids.dtype)
+    out_d[:, :kk] = np.take_along_axis(d2, order, axis=1)
+    out_i[:, :kk] = np.take_along_axis(i2, order, axis=1)
+    return out_d.reshape(*lead, k), out_i.reshape(*lead, k)
+
+
 def merge_topk_np(dists: np.ndarray, ids: np.ndarray, k: int):
     """Python-loop reference of merge_topk (ground truth for parity tests)."""
     *lead, C = dists.shape

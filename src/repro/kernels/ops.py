@@ -18,10 +18,12 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.utils import next_pow2, round_up
 from repro.kernels import ref
 from repro.kernels.distance_topk import distance_topk_pallas
+from repro.kernels.distance_topk_q8 import distance_topk_q8_pallas
 
 LANE = 128
 
@@ -39,18 +41,27 @@ def distance_topk(
     block_q: int = 8,
     block_n: int = 256,
     backend: str = "auto",  # 'auto' | 'pallas' | 'pallas_interpret' | 'jnp'
+    n_valid: int | None = None,
 ):
     """Top-k nearest rows of ``x`` for each row of ``q``.
 
     Returns (dists (B, k) ascending, ids (B, k) int32; id -1 where fewer than
     k valid rows exist).  For metric='l2' distances are true squared L2; for
     'ip'/'cos' they are negative (inner product / cosine similarity).
+
+    ``n_valid``: number of real corpus rows when ``x`` is padded to a shared
+    shape bucket (rows >= n_valid are ignored).  On the jnp path it is a
+    traced scalar, so every partition padded to the same bucket reuses ONE
+    compiled trace — the point of the scan-engine pow2 bucketing.  (The
+    Pallas kernel bakes it statically; folding it into SMEM is a ROADMAP
+    follow-on.)
     """
     q = jnp.asarray(q)
     x = jnp.asarray(x)
     B, D = q.shape
     N = x.shape[0]
-    if N == 0:
+    nv = N if n_valid is None else min(int(n_valid), N)
+    if N == 0 or nv == 0:
         # empty corpus: nothing to rank.  The k > N recursion below would
         # otherwise bottom out calling the blocked scan with k=0 — return the
         # (inf, -1) padding directly.
@@ -60,7 +71,8 @@ def distance_topk(
         )
     if k > N:  # fewer corpus rows than requested: pad with (inf, -1)
         d, i = distance_topk(
-            q, x, N, metric, block_q=block_q, block_n=block_n, backend=backend
+            q, x, N, metric, block_q=block_q, block_n=block_n,
+            backend=backend, n_valid=nv,
         )
         pad_d = jnp.full((B, k - N), jnp.inf, d.dtype)
         pad_i = jnp.full((B, k - N), -1, i.dtype)
@@ -80,7 +92,8 @@ def distance_topk(
     # time inside ref.distance_matrix (redundant work, not a result change).
     if backend == "jnp":
         return ref.distance_topk_blocked(
-            q.astype(jnp.float32), x.astype(jnp.float32), k, metric_k
+            q.astype(jnp.float32), x.astype(jnp.float32), k, metric_k,
+            n_valid=nv,
         )
 
     k_pad = max(next_pow2(k), LANE)
@@ -88,7 +101,8 @@ def distance_topk(
         # the in-kernel buffer tops out at 256; larger k streams through the
         # blocked jnp merge instead (rare: paper's k is 100-200).
         return ref.distance_topk_blocked(
-            q.astype(jnp.float32), x.astype(jnp.float32), k, metric_k
+            q.astype(jnp.float32), x.astype(jnp.float32), k, metric_k,
+            n_valid=nv,
         )
     # pick block_n so the in-kernel merge length k_pad + block_n is a power
     # of two (bitonic network) and a lane multiple.
@@ -107,13 +121,119 @@ def distance_topk(
         k_pad=k_pad,
         block_q=block_q,
         block_n=block_n,
-        n_valid=N,
+        n_valid=nv,
         metric=metric_k,
         interpret=(backend == "pallas_interpret") or not _on_tpu(),
     )
     out_d, out_i = out_d[:B, :k], out_i[:B, :k]
     if metric == "l2":
         qn = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+        out_d = jnp.where(jnp.isinf(out_d), out_d, out_d + qn)
+    out_i = jnp.where(jnp.isinf(out_d), -1, out_i)
+    return out_d, out_i
+
+
+def distance_topk_q8(
+    q,
+    qc,
+    k: int,
+    metric: str = "l2",
+    *,
+    block_q: int = 8,
+    block_n: int = 256,
+    backend: str = "auto",
+    n_valid: int | None = None,
+):
+    """Quantized top-k: rank the int8 corpus ``qc`` for each row of ``q``.
+
+    ``qc`` is a ``repro.quant.codec.Q8Corpus`` (or any object with
+    ``codes``/``scales``/``norms2``).  Returns (dists, ids) in the same
+    convention as :func:`distance_topk`, except distances are the QUANTIZED
+    scores — the distance to the dequantized corpus point, with the query
+    itself quantized for the integer contraction.  These rank candidates for
+    the exact re-rank stage; they are within codec error of the fp32
+    distances, not equal to them.
+
+    Backends mirror :func:`distance_topk`: the fused int8 Pallas kernel on
+    TPU (or ``pallas_interpret``), and the blocked int8 jnp scan elsewhere —
+    both produce bit-identical scores (the dot is exact int32 either way).
+    """
+    codes = jnp.asarray(qc.codes)
+    scales = np.asarray(qc.scales, np.float32)
+    norms2 = jnp.asarray(qc.norms2)
+    q = np.asarray(q, np.float32)
+    B, D = q.shape
+    N = codes.shape[0]
+    nv = N if n_valid is None else min(int(n_valid), N)
+    if N == 0 or nv == 0:
+        return (
+            jnp.full((B, k), jnp.inf, jnp.float32),
+            jnp.full((B, k), -1, jnp.int32),
+        )
+    if k > N:
+        d, i = distance_topk_q8(
+            q, qc, N, metric, block_q=block_q, block_n=block_n,
+            backend=backend, n_valid=nv,
+        )
+        pad_d = jnp.full((B, k - N), jnp.inf, d.dtype)
+        pad_i = jnp.full((B, k - N), -1, i.dtype)
+        return jnp.concatenate([d, pad_d], 1), jnp.concatenate([i, pad_i], 1)
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "jnp"
+    qc_metric = getattr(qc, "metric", None)
+    if qc_metric is not None and qc_metric != metric:
+        # 'cos' codes are built from normalized rows; scoring them as 'ip'
+        # (or vice versa) would silently return wrong rankings.
+        raise ValueError(
+            f"corpus was quantized for metric={qc_metric!r} but scoring "
+            f"requested metric={metric!r}"
+        )
+
+    from repro.quant.codec import quantize_queries_q8
+
+    q_eff = q
+    if metric == "cos":
+        q_eff = q / np.maximum(
+            np.linalg.norm(q, axis=-1, keepdims=True), 1e-12
+        )
+        metric_k = "ip"
+    else:
+        metric_k = metric
+    q_codes, q_scale = quantize_queries_q8(q_eff, scales)
+
+    k_pad = max(next_pow2(k), LANE)
+    if backend == "jnp" or k_pad > 256:
+        out_d, out_i = ref.distance_topk_q8_blocked(
+            jnp.asarray(q_codes), codes, jnp.asarray(q_scale), norms2,
+            k, metric_k, n_valid=nv,
+        )
+    else:
+        D_pad = round_up(D, LANE)
+        B_pad = round_up(B, block_q)
+        block_n = max(block_n, k_pad)
+        block_n = next_pow2(k_pad + block_n) - k_pad
+        N_pad = round_up(N, block_n)
+        qp = np.zeros((B_pad, D_pad), np.int8)
+        qp[:B, :D] = q_codes
+        xp = jnp.zeros((N_pad, D_pad), jnp.int8).at[:N, :D].set(codes)
+        qsp = np.zeros((B_pad, 1), np.float32)
+        qsp[:B, 0] = q_scale
+        n2p = jnp.full((1, N_pad), jnp.inf, jnp.float32).at[0, :N].set(norms2)
+        out_d, out_i = distance_topk_q8_pallas(
+            jnp.asarray(qp),
+            xp,
+            jnp.asarray(qsp),
+            n2p,
+            k_pad=k_pad,
+            block_q=block_q,
+            block_n=block_n,
+            n_valid=nv,
+            metric=metric_k,
+            interpret=(backend == "pallas_interpret") or not _on_tpu(),
+        )
+        out_d, out_i = out_d[:B, :k], out_i[:B, :k]
+    if metric == "l2":
+        qn = jnp.sum(jnp.asarray(q) ** 2, axis=-1, keepdims=True)
         out_d = jnp.where(jnp.isinf(out_d), out_d, out_d + qn)
     out_i = jnp.where(jnp.isinf(out_d), -1, out_i)
     return out_d, out_i

@@ -1,0 +1,40 @@
+"""Quantized scan + exact re-rank subsystem (DESIGN: LoRANN/AQR-style).
+
+The LANNS serving regime is bounded by corpus footprint and scan bandwidth
+long before compute: fp32 corpora cap how many segments fit device-resident.
+This package provides the standard fix — score a compact int8 corpus to
+generate candidates, then re-rank a small candidate set against the exact
+fp32 vectors — recovering full-precision recall at a fraction of the
+resident bytes.
+
+Pieces:
+
+* ``codec``    — symmetric per-dimension int8 quantization (scale vector +
+  per-vector norm correction), ``quantize_q8``/``dequantize_q8`` and numpy
+  reference scoring;
+* ``twostage`` — the CPU/TPU two-stage scan executor state used by
+  ``LannsIndex.query`` (stage-1 int8 scores, top-C candidate selection,
+  batched exact re-rank);
+* the fused Pallas int8 kernel lives in ``repro.kernels.distance_topk_q8``
+  with its public wrapper ``repro.kernels.ops.distance_topk_q8``.
+"""
+
+from repro.quant.codec import (
+    Q8Corpus,
+    dequantize_q8,
+    distance_topk_q8_np,
+    q8_bytes_per_vector,
+    q8_scores_np,
+    quantize_q8,
+    quantize_queries_q8,
+)
+
+__all__ = [
+    "Q8Corpus",
+    "dequantize_q8",
+    "distance_topk_q8_np",
+    "q8_bytes_per_vector",
+    "q8_scores_np",
+    "quantize_q8",
+    "quantize_queries_q8",
+]

@@ -1,0 +1,199 @@
+"""q8 codec + int8 kernel: round-trip bounds, backend bit-parity, oracles.
+
+The contracts locked in here:
+
+* the codec's round-trip error is bounded by half a quantization step per
+  coordinate (symmetric round-to-nearest, no clipping);
+* the int8 Pallas kernel (interpret mode) and the blocked-jnp fallback
+  produce BIT-IDENTICAL distances (the int8 dot is exact int32 either way
+  and the fp32 rescale is the same expression);
+* both match the numpy reference scoring in ``repro.quant.codec``;
+* quantized scores track exact fp32 distances within codec error, which is
+  what makes a small rerank_factor sufficient downstream.
+"""
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.quant import (
+    Q8Corpus,
+    dequantize_q8,
+    distance_topk_q8_np,
+    q8_bytes_per_vector,
+    q8_scores_np,
+    quantize_q8,
+    quantize_queries_q8,
+)
+
+
+def _rand(B, N, D, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((B, D)).astype(np.float32) * scale
+    x = rng.standard_normal((N, D)).astype(np.float32) * scale
+    return q, x
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip_error_bound():
+    _, x = _rand(1, 700, 48, seed=1, scale=3.0)
+    qc = quantize_q8(x)
+    deq = dequantize_q8(qc)
+    assert qc.codes.dtype == np.int8 and qc.scales.shape == (48,)
+    assert np.abs(qc.codes).max() <= 127
+    # round-to-nearest: at most half a step per coordinate
+    assert np.all(np.abs(x - deq) <= qc.scales[None, :] / 2 + 1e-7)
+    # norms2 is the dequantized norm, exactly
+    assert np.allclose(qc.norms2, (deq * deq).sum(1), rtol=1e-6)
+
+
+def test_cos_rows_normalized_before_encoding():
+    _, x = _rand(1, 300, 16, seed=2, scale=5.0)
+    qc = quantize_q8(x, metric="cos")
+    deq = dequantize_q8(qc)
+    norms = np.linalg.norm(deq, axis=1)
+    # dequantized rows are unit up to codec error
+    assert np.abs(norms - 1.0).max() < 0.01
+
+
+def test_query_quantization_bound():
+    q, x = _rand(32, 10, 24, seed=3)
+    qc = quantize_q8(x)
+    q_codes, q_scale = quantize_queries_q8(q, qc.scales)
+    assert q_codes.dtype == np.int8
+    # reconstructing the folded query: error <= half a step per coordinate
+    back = q_codes.astype(np.float32) * q_scale[:, None]
+    assert np.all(np.abs(back - q * qc.scales[None, :]) <= q_scale[:, None] / 2 + 1e-7)
+
+
+def test_empty_corpus_codec():
+    qc = quantize_q8(np.zeros((0, 8), np.float32))
+    assert qc.size == 0 and qc.dim == 8
+    d, i = ops.distance_topk_q8(np.zeros((3, 8), np.float32), qc, 5)
+    assert np.all(np.isinf(np.asarray(d))) and np.all(np.asarray(i) == -1)
+
+
+def test_bytes_per_vector_under_fp32():
+    _, x = _rand(1, 2000, 64, seed=4)
+    qc = quantize_q8(x)
+    bpv = q8_bytes_per_vector(qc)
+    # codes d bytes + 4-byte norm + amortized scales << 4d fp32 bytes
+    assert bpv <= 64 + 4 + 1
+    assert bpv < 64 * 4 / 3.5  # ~4x smaller than fp32
+
+
+# ---------------------------------------------------------------------------
+# kernel: interpret mode vs jnp fallback vs numpy reference
+# ---------------------------------------------------------------------------
+
+SWEEP = [
+    (4, 300, 24, 10, "l2"),
+    (3, 513, 128, 7, "ip"),      # SIFT dims, odd N
+    (5, 200, 20, 5, "cos"),
+    (2, 64, 8, 100, "l2"),       # k > N
+    (2, 150, 960, 16, "l2"),     # GIST dims
+    (9, 255, 2048, 128, "ip"),   # k == lane width, D > exact-cast bound
+]
+
+
+def _ids_match_up_to_ties(i_a, i_b, fin):
+    for ra, rb, f in zip(i_a, i_b, fin):
+        sa, sb = set(ra[f].tolist()), set(rb[f].tolist())
+        assert len(sa & sb) >= len(sb) - 1  # allow one tie swap
+
+
+@pytest.mark.parametrize("B,N,D,k,metric", SWEEP)
+def test_interpret_vs_jnp_bit_parity(B, N, D, k, metric):
+    q, x = _rand(B, N, D, seed=B + N)
+    qc = quantize_q8(x, metric)
+    d_i, i_i = ops.distance_topk_q8(q, qc, k, metric, backend="pallas_interpret")
+    d_j, i_j = ops.distance_topk_q8(q, qc, k, metric, backend="jnp")
+    d_i, i_i, d_j, i_j = map(np.asarray, (d_i, i_i, d_j, i_j))
+    assert np.array_equal(d_i, d_j), (metric, np.abs(d_i - d_j).max())
+    _ids_match_up_to_ties(i_i, i_j, np.isfinite(d_j))
+
+
+@pytest.mark.parametrize("B,N,D,k,metric", SWEEP[:4])
+def test_kernel_matches_numpy_reference(B, N, D, k, metric):
+    q, x = _rand(B, N, D, seed=2 * B + N)
+    qc = quantize_q8(x, metric)
+    d_k, i_k = map(
+        np.asarray,
+        ops.distance_topk_q8(q, qc, k, metric, backend="pallas_interpret"),
+    )
+    d_r, i_r = distance_topk_q8_np(q, qc, k, metric)
+    fin = np.isfinite(d_r)
+    assert np.allclose(d_k[fin], d_r[fin], rtol=1e-5, atol=1e-5)
+    _ids_match_up_to_ties(i_k, i_r, fin)
+
+
+def test_quantized_scores_track_exact():
+    """Stage-1 scores deviate from exact fp32 distances only by codec error
+    — the property that lets a small rerank_factor recover full recall."""
+    q, x = _rand(16, 400, 32, seed=7)
+    qc = quantize_q8(x)
+    s = q8_scores_np(q, qc, "l2")
+    exact = (
+        (q * q).sum(1)[:, None]
+        - 2.0 * q @ x.T
+        + (x * x).sum(1)[None, :]
+    )
+    # analytic-ish bound: per-coordinate step errors accumulate ~sqrt(D)
+    denom = np.maximum(np.abs(exact), 1.0)
+    rel = np.abs(s - exact) / denom
+    assert rel.max() < 0.05, rel.max()
+    # quantized-only ranking is already close; re-rank closes the rest
+    order_q = np.argsort(s, axis=1)[:, :10]
+    order_e = np.argsort(exact, axis=1)[:, :10]
+    overlap = np.mean([
+        len(set(a) & set(b)) / 10 for a, b in zip(order_q, order_e)
+    ])
+    assert overlap > 0.9
+
+
+def test_n_valid_masks_padding_rows():
+    """A corpus padded to a shape bucket + n_valid == the raw corpus."""
+    q, x = _rand(4, 100, 16, seed=8)
+    qc = quantize_q8(x)
+    pad = 128
+    qc_pad = Q8Corpus(
+        codes=np.vstack([qc.codes, np.full((pad - 100, 16), 7, np.int8)]),
+        scales=qc.scales,
+        norms2=np.concatenate(
+            [qc.norms2, np.full((pad - 100,), np.inf, np.float32)]
+        ),
+        metric=qc.metric,
+    )
+    for backend in ("jnp", "pallas_interpret"):
+        d0, i0 = map(
+            np.asarray, ops.distance_topk_q8(q, qc, 9, backend=backend)
+        )
+        d1, i1 = map(
+            np.asarray,
+            ops.distance_topk_q8(q, qc_pad, 9, backend=backend, n_valid=100),
+        )
+        assert np.array_equal(d0, d1) and np.array_equal(i0, i1)
+
+
+def test_blocked_q8_streams_blocks():
+    """Multi-block streaming merge == single-block result."""
+    q, x = _rand(3, 900, 24, seed=9)
+    qc = quantize_q8(x)
+    from repro.quant.codec import quantize_queries_q8 as qq
+    import jax.numpy as jnp
+
+    q_codes, q_scale = qq(q, qc.scales)
+    d0, i0 = ref.distance_topk_q8_blocked(
+        jnp.asarray(q_codes), jnp.asarray(qc.codes), jnp.asarray(q_scale),
+        jnp.asarray(qc.norms2), 8, "l2", block_n=256,
+    )
+    d1, i1 = ref.distance_topk_q8_blocked(
+        jnp.asarray(q_codes), jnp.asarray(qc.codes), jnp.asarray(q_scale),
+        jnp.asarray(qc.norms2), 8, "l2", block_n=4096,
+    )
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))

@@ -1,0 +1,181 @@
+"""Two-stage quantized serving through LannsIndex.
+
+Contracts:
+
+* recall parity — the q8 two-stage path recovers the fp32 scan path's
+  recall (>= 0.99 relative) on l2/ip/cos/mips, and its returned distances
+  are EXACT (stage 2 re-ranks against fp32 originals);
+* the rerank_factor * k > segment-size clamp degrades gracefully (the
+  satellite bugfix): candidates clamp to the segment, -1 padding survives
+  re-rank and merge, and with full-segment candidate cover the results
+  match the fp32 path exactly;
+* rerank_store='host' and 'device' agree;
+* physical spill routes through the dedup merge (no duplicate ids);
+* config validation and the B == 0 edge hold.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LannsConfig,
+    LannsIndex,
+    brute_force_topk,
+    recall_at_k,
+)
+from repro.data.synthetic import clustered_vectors
+
+
+def _cfg(metric="l2", quantized="q8", **kw):
+    base = dict(
+        num_shards=1, num_segments=4, segmenter="apd", engine="scan",
+        alpha=0.15, metric=metric, quantized=quantized,
+    )
+    base.update(kw)
+    return LannsConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def world():
+    data = clustered_vectors(4000, 24, n_clusters=32, seed=0)
+    queries = clustered_vectors(64, 24, n_clusters=32, seed=1)
+    return data, queries
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos", "mips"])
+def test_q8_recall_parity_vs_fp32(world, metric):
+    data, queries = world
+    k = 100
+    idx_fp = LannsIndex(_cfg(metric, quantized="none")).build(data)
+    idx_q8 = LannsIndex(_cfg(metric)).build(data)
+    d_fp, i_fp = idx_fp.query(queries, k)
+    d_q8, i_q8 = idx_q8.query(queries, k)
+    rel = recall_at_k(i_q8, i_fp, k)
+    assert rel >= 0.99, (metric, rel)
+    # absolute recall: within a point of the fp32 path against brute force
+    bf_metric = "ip" if metric == "mips" else metric
+    _, ti = brute_force_topk(queries, data, k, metric=bf_metric)
+    r_fp = recall_at_k(i_fp, ti, k)
+    r_q8 = recall_at_k(i_q8, ti, k)
+    assert r_q8 >= r_fp - 0.01, (metric, r_fp, r_q8)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+def test_q8_distances_are_exact(world, metric):
+    """Stage 2 re-ranks against fp32 originals, so every returned distance
+    equals the true metric distance of (query, returned id)."""
+    data, queries = world
+    idx = LannsIndex(_cfg(metric)).build(data)
+    d, i = idx.query(queries, 10)
+    fin = np.isfinite(d) & (i >= 0)
+    got = data[np.clip(i, 0, None)]
+    if metric == "l2":
+        exact = ((queries[:, None, :] - got) ** 2).sum(-1)
+    elif metric == "ip":
+        exact = -np.einsum("bd,bkd->bk", queries, got)
+    else:
+        qn = queries / np.linalg.norm(queries, axis=1, keepdims=True)
+        gn = got / np.maximum(
+            np.linalg.norm(got, axis=-1, keepdims=True), 1e-12
+        )
+        exact = -np.einsum("bd,bkd->bk", qn, gn)
+    assert np.allclose(d[fin], exact[fin], rtol=1e-4, atol=1e-4)
+
+
+def test_rerank_factor_exceeding_segment_clamps(world):
+    """Satellite bugfix: rerank_factor * k > segment size must clamp (no
+    out-of-range gathers) and — since the clamp covers the whole segment —
+    match the fp32 path exactly."""
+    data, queries = world
+    small = data[:300]  # 4 segments of ~75 rows; C = 4 * 100 >> 75
+    k = 100
+    idx_q8 = LannsIndex(_cfg(rerank_factor=4)).build(small)
+    idx_fp = LannsIndex(_cfg(quantized="none")).build(small)
+    d_q8, i_q8 = idx_q8.query(queries, k)
+    d_fp, i_fp = idx_fp.query(queries, k)
+    assert d_q8.shape == (len(queries), k)
+    # -1 padding is preserved through re-rank and merge
+    assert np.array_equal(i_q8 == -1, ~np.isfinite(d_q8))
+    assert (i_q8 == -1).any(), "expected padding (segments < k rows)"
+    # full-segment candidate cover -> exact == fp32 results per query
+    for r in range(len(queries)):
+        fin = np.isfinite(d_fp[r])
+        assert set(i_q8[r][fin]) == set(i_fp[r][fin])
+        assert np.allclose(np.sort(d_q8[r][fin]), np.sort(d_fp[r][fin]),
+                           rtol=1e-5)
+
+
+def test_rerank_store_host_device_agree(world):
+    data, queries = world
+    idx_h = LannsIndex(_cfg(rerank_store="host")).build(data)
+    idx_d = LannsIndex(_cfg(rerank_store="device")).build(data)
+    d_h, i_h = idx_h.query(queries, 20)
+    d_d, i_d = idx_d.query(queries, 20)
+    # both stores compute exact fp32 distances (accumulation order may
+    # differ): distances agree tightly, ids up to fp ties
+    assert np.allclose(d_h, d_d, rtol=1e-4, atol=1e-4, equal_nan=True)
+    assert recall_at_k(i_d, i_h, 20) > 0.995
+
+
+def test_physical_spill_uses_dedup_merge(world):
+    data, queries = world
+    cfg = _cfg(spill="physical")
+    idx = LannsIndex(cfg).build(data)
+    assert idx.build_stats["duplication_factor"] > 1.0
+    d, i = idx.query(queries, 20)
+    for row in i:
+        real = row[row >= 0]
+        assert len(set(real.tolist())) == len(real), "duplicate ids"
+    _, ti = brute_force_topk(queries, data, 20)
+    assert recall_at_k(i, ti, 15) > 0.6
+
+
+def test_multi_shard_q8(world):
+    data, queries = world
+    idx = LannsIndex(_cfg(num_shards=2, num_segments=2)).build(data)
+    idx_fp = LannsIndex(
+        _cfg(num_shards=2, num_segments=2, quantized="none")
+    ).build(data)
+    _, i_q8 = idx.query(queries, 20)
+    _, i_fp = idx_fp.query(queries, 20)
+    assert recall_at_k(i_q8, i_fp, 20) >= 0.99
+
+
+def test_q8_empty_batch_and_stats(world):
+    data, _ = world
+    idx = LannsIndex(_cfg()).build(data[:500])
+    empty = np.zeros((0, data.shape[1]), np.float32)
+    d, i, stats = idx.query(empty, 7, return_stats=True)
+    assert d.shape == (0, 7) and i.shape == (0, 7)
+    assert "scan_traces_q8" in stats and "scan_traces" in stats
+    _, _, full = idx.query(data[:3], 7, return_stats=True)
+    assert set(stats) == set(full)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="quantized"):
+        LannsIndex(LannsConfig(quantized="int4"))
+    with pytest.raises(ValueError, match="engine='scan'"):
+        LannsIndex(LannsConfig(engine="hnsw", quantized="q8"))
+    with pytest.raises(ValueError, match="rerank_store"):
+        LannsIndex(LannsConfig(engine="scan", quantized="q8",
+                               rerank_store="gpu"))
+
+
+def test_fp32_path_untouched_when_quantized_off(world):
+    """quantized='none' must not allocate any quantized state — the fp32
+    executor and its results are byte-for-byte the pre-quantization path."""
+    data, queries = world
+    idx = LannsIndex(_cfg(quantized="none")).build(data[:1000])
+    assert all(p.q8 is None for p in idx.partitions.values())
+    d, i = idx.query(queries, 10)
+    # scan padding is result-transparent: compare against the unpadded scan
+    from repro.kernels import ops
+
+    part = next(iter(idx.partitions.values()))
+    d0, i0 = ops.distance_topk(queries, part.vectors, 5, "l2")
+    d1, i1 = ops.distance_topk(
+        queries, part.scan_corpus(), 5, "l2", n_valid=part.size
+    )
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))

@@ -1,0 +1,98 @@
+"""Scan-engine trace stability (ROADMAP item closed by this PR).
+
+Scan partition corpora pad to shared pow2 size buckets and routed batches
+to pow2 query buckets, so ``distance_topk`` (blocked-jnp on CPU) compiles
+once per DISTINCT (query bucket, corpus bucket) pair — never once per
+(partition, routed-subset) pair.  Mirrors tests/test_hnsw_trace.py, using
+the same jit-cache counters; the q8 stage-1 jit is bounded the same way
+(quarter-pow2 lane buckets x corpus buckets).
+"""
+
+import numpy as np
+import pytest
+
+from repro.common.utils import jit_cache_size, next_pow2, next_pow2_quarter
+from repro.core import LannsConfig, LannsIndex
+from repro.data.synthetic import clustered_vectors
+from repro.kernels import ref
+from repro.quant import twostage
+
+
+@pytest.fixture(scope="module")
+def scan_index():
+    data = clustered_vectors(3000, 16, n_clusters=32, seed=0)
+    queries = clustered_vectors(80, 16, n_clusters=32, seed=1)
+    cfg = LannsConfig(num_shards=2, num_segments=4, segmenter="apd",
+                      engine="scan", alpha=0.15)
+    return LannsIndex(cfg).build(data), queries
+
+
+def test_scan_traces_bounded_across_partitions_and_batches(scan_index):
+    idx, queries = scan_index
+    idx.query(queries[:4], 10)  # warm
+    before = jit_cache_size(ref.distance_topk_blocked)
+    sizes = (1, 2, 3, 5, 7, 9, 13, 30, 41, 63, 80)
+    qbuckets, nbuckets = set(), set()
+    for B in sizes:
+        q = queries[:B]
+        mask = idx.partitioner.route_queries(q)
+        for g in range(idx.config.num_segments):
+            c = int(mask[:, g].sum())
+            if c:
+                qbuckets.add(next_pow2(c))
+        idx.query(q, 10)
+    for p in idx.partitions.values():
+        if p.size:
+            nbuckets.add(next_pow2_quarter(p.size))
+    new = jit_cache_size(ref.distance_topk_blocked) - before
+    assert new <= len(qbuckets) * len(nbuckets), (
+        new, qbuckets, nbuckets
+    )
+    # and strictly fewer than one trace per (batch, partition) combination
+    assert new < len(sizes) * len(idx.partitions) / 2
+
+
+def test_q8_stage1_traces_bounded():
+    data = clustered_vectors(2500, 16, n_clusters=16, seed=2)
+    queries = clustered_vectors(64, 16, n_clusters=16, seed=3)
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                      engine="scan", alpha=0.15, quantized="q8")
+    idx = LannsIndex(cfg).build(data)
+    idx.query(queries[:4], 10)  # warm
+    before = jit_cache_size(twostage._stage1_scores)
+    lbuckets, nbuckets = set(), set()
+    for B in (1, 3, 6, 11, 17, 33, 64):
+        q = queries[:B]
+        mask = idx.partitioner.route_queries(q)
+        for g in range(idx.config.num_segments):
+            c = int(mask[:, g].sum())
+            if c:
+                lbuckets.add(next_pow2_quarter(c))
+        idx.query(q, 10)
+    for p in idx.partitions.values():
+        if p.size:
+            nbuckets.add(next_pow2_quarter(p.size))
+    new = jit_cache_size(twostage._stage1_scores) - before
+    assert new <= len(lbuckets) * len(nbuckets), (new, lbuckets, nbuckets)
+
+
+def test_scan_padding_is_result_transparent(scan_index):
+    """Bucketed corpora + n_valid masking change ZERO bits of any result."""
+    idx, queries = scan_index
+    from repro.kernels import ops
+
+    for p in idx.partitions.values():
+        if p.size == 0 or p.scan_corpus() is p.vectors:
+            continue
+        d0, i0 = ops.distance_topk(queries[:8], p.vectors, 7, "l2")
+        d1, i1 = ops.distance_topk(
+            queries[:8], p.scan_corpus(), 7, "l2", n_valid=p.size
+        )
+        assert np.array_equal(np.asarray(d0), np.asarray(d1))
+        assert np.array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_scan_trace_counter_in_stats(scan_index):
+    idx, queries = scan_index
+    _, _, stats = idx.query(queries[:8], 10, return_stats=True)
+    assert stats["scan_traces"] != 0  # -1 (unavailable) or a real count
