@@ -26,7 +26,13 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, quantized_scan_compare, sift_like_corpus
+from benchmarks.common import (
+    bench_payload,
+    emit,
+    quantized_scan_compare,
+    sift_like_corpus,
+    write_bench_json,
+)
 from repro.core import LannsConfig, LannsIndex
 from repro.serve.engine import AnnFrontend
 
@@ -40,6 +46,7 @@ def _percentiles(lat: np.ndarray) -> str:
 
 def run_offline(idx, queries, topk, duration_s):
     n_pool = len(queries)
+    metrics = {}
     for batch in (1, 8, 64, 1024):
         lat = []
         served = 0
@@ -56,15 +63,18 @@ def run_offline(idx, queries, topk, duration_s):
             qi += batch
         lat = np.array(lat)
         qps = served / lat.sum()
+        metrics[f"qps_offline_b{batch}"] = qps
         emit(
             f"online_qps.batch{batch}",
             1e6 * lat.mean() / batch,
             f"qps={qps:.0f};{_percentiles(lat)}",
         )
+    return metrics
 
 
 def run_frontend(idx, queries, topk, duration_s):
     n_pool = len(queries)
+    metrics = {}
     for max_batch, max_wait_ms in ((64, 1.0), (256, 5.0)):
         fe = AnnFrontend(idx, topk=topk, max_batch=max_batch,
                          max_wait_ms=max_wait_ms)
@@ -82,12 +92,14 @@ def run_frontend(idx, queries, topk, duration_s):
             lat.append(time.perf_counter() - r.t_submit)
         elapsed = time.perf_counter() - t_start
         lat = np.array(lat)
+        metrics[f"qps_frontend_b{max_batch}"] = len(lat) / elapsed
         emit(
             f"online_qps.frontend_b{max_batch}_w{max_wait_ms:g}ms",
             1e6 * elapsed / len(lat),
             f"qps={len(lat) / elapsed:.0f};{_percentiles(lat)};"
             f"mean_batch={fe.mean_batch_size:.1f}",
         )
+    return metrics
 
 
 def run_hnsw_compare(corpus, queries, topk, duration_s, batch=1024):
@@ -140,34 +152,65 @@ def run_hnsw_compare(corpus, queries, topk, duration_s, batch=1024):
         f"speedup={qps['stacked'] / qps['legacy']:.2f}x;"
         f"bit_identical={identical}",
     )
+    return {
+        "qps_hnsw_stacked": qps["stacked"],
+        "qps_hnsw_legacy": qps["legacy"],
+        "hnsw_speedup": qps["stacked"] / qps["legacy"],
+        "hnsw_bit_identical": float(identical),
+    }
 
 
-def run(n=16_000, d=64, topk=100, duration_s=3.0, n_hnsw=12_000):
+def run(n=16_000, d=64, topk=100, duration_s=3.0, n_hnsw=12_000,
+        out="BENCH_online_qps.json", smoke=False):
     corpus, queries = sift_like_corpus(n, d, 2048, seed=31)
     cfg = LannsConfig(
         num_shards=1, num_segments=8, segmenter="apd", engine="scan",
         alpha=0.15,
     )
     idx = LannsIndex(cfg).build(corpus)
-    run_offline(idx, queries, topk, duration_s)
-    run_frontend(idx, queries, topk, duration_s)
-    run_hnsw_compare(corpus[:n_hnsw], queries, topk, duration_s)
+    # pre-compile every (pow2 batch, corpus bucket) scan trace: sliding query
+    # windows reroute every call, and a compile landing inside a short timed
+    # window poisons that batch size's QPS (b8 reading 3x below b1).
+    idx.warm_traces(1024, topk)
+    metrics = {}
+    metrics.update(run_offline(idx, queries, topk, duration_s))
+    metrics.update(run_frontend(idx, queries, topk, duration_s))
+    metrics.update(run_hnsw_compare(corpus[:n_hnsw], queries, topk, duration_s))
     # quantized leg: fp32 scan vs two-stage q8 (shared harness with
     # bench_recall --quantized — one protocol, one memory accounting)
-    quantized_scan_compare(
+    qstats = quantized_scan_compare(
         corpus, queries, topk, 1024, prefix="online_qps",
         duration_s=2 * duration_s,
     )
+    metrics.update(
+        qps_scan_fp32=qstats["qps_fp32"],
+        qps_scan_q8=qstats["qps_q8"],
+        q8_rel_recall=qstats["rel_recall"],
+        q8_bytes_per_vec=qstats["bytes_per_vec_q8"],
+    )
+    payload = bench_payload(
+        "online_qps",
+        config=dict(n=n, d=d, topk=topk, duration_s=duration_s,
+                    n_hnsw=n_hnsw, num_segments=cfg.num_segments,
+                    segmenter=cfg.segmenter),
+        metrics=metrics,
+        smoke=smoke,
+    )
+    write_bench_json(out, payload)
+    return payload
 
 
-def run_smoke():
+def run_smoke(out="BENCH_online_qps.json"):
     """CI wiring check: tiny corpus, sub-second windows, every code path."""
-    run(n=3000, d=32, topk=20, duration_s=0.4, n_hnsw=2000)
+    return run(n=3000, d=32, topk=20, duration_s=0.4, n_hnsw=2000, out=out,
+               smoke=True)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny corpus / short windows (CI wiring check)")
+    ap.add_argument("--out", default="BENCH_online_qps.json",
+                    help="output JSON path")
     args = ap.parse_args()
-    run_smoke() if args.smoke else run()
+    run_smoke(args.out) if args.smoke else run(out=args.out)

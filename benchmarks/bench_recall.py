@@ -15,11 +15,13 @@ from __future__ import annotations
 import argparse
 
 from benchmarks.common import (
+    bench_payload,
     emit,
     ground_truth,
     quantized_scan_compare,
     sift_like_corpus,
     time_call,
+    write_bench_json,
 )
 from repro.core import (
     HNSWConfig,
@@ -33,7 +35,8 @@ from repro.core import (
 KS = (1, 5, 10, 15, 50, 100)
 
 
-def run(n=20_000, d=64, n_queries=300, topk=100, engine="scan"):
+def run(n=20_000, d=64, n_queries=300, topk=100, engine="scan",
+        out="BENCH_recall_table1.json"):
     corpus, queries = sift_like_corpus(n, d, n_queries)
     td, ti = ground_truth(corpus, queries, topk)
     results = {}
@@ -69,10 +72,25 @@ def run(n=20_000, d=64, n_queries=300, topk=100, engine="scan"):
             ";".join(f"R@{k}={v:.4f}" for k, v in results[name].items())
             + f";build_s={t_build:.1f}",
         )
+    payload = bench_payload(
+        # distinct bench name: the committed baseline entry for "recall"
+        # gates the quantized protocol; the table-1 sweep is reported only.
+        "recall_table1",
+        config=dict(n=n, d=d, n_queries=n_queries, topk=topk, engine=engine,
+                    mode="table1"),
+        metrics={
+            f"recall_at_10_{name}": table[10]
+            for name, table in results.items()
+        },
+        rows=[{"method": name, **{f"R@{k}": v for k, v in table.items()}}
+              for name, table in results.items()],
+    )
+    write_bench_json(out, payload)
     return results
 
 
-def run_quantized(n=20_000, d=64, batch=1024, topk=100, smoke=False):
+def run_quantized(n=20_000, d=64, batch=1024, topk=100, smoke=False,
+                  out="BENCH_recall.json"):
     """q8 two-stage vs fp32 scan: QPS, recall, resident bytes-per-vector.
 
     The acceptance protocol rides the shared harness in benchmarks/common.py
@@ -94,6 +112,20 @@ def run_quantized(n=20_000, d=64, batch=1024, topk=100, smoke=False):
         f"R@{topk}_fp32={r_fp:.4f};R@{topk}_q8={r_q8:.4f}",
     )
     stats.update(recall_fp32=r_fp, recall_q8=r_q8)
+    payload = bench_payload(
+        "recall",
+        config=dict(n=n, d=d, batch=batch, topk=topk, mode="quantized"),
+        metrics={
+            "qps_scan_fp32": stats["qps_fp32"],
+            "qps_scan_q8": stats["qps_q8"],
+            "q8_rel_recall": stats["rel_recall"],
+            "recall_fp32": r_fp,
+            "recall_q8": r_q8,
+            "q8_bytes_per_vec": stats["bytes_per_vec_q8"],
+        },
+        smoke=smoke,
+    )
+    write_bench_json(out, payload)
     return stats
 
 
@@ -103,8 +135,12 @@ if __name__ == "__main__":
                     help="two-stage q8 vs fp32 scan acceptance protocol")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny corpus (CI wiring check)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_recall.json for "
+                         "--quantized, BENCH_recall_table1.json otherwise — "
+                         "distinct so the legs never clobber each other)")
     args = ap.parse_args()
     if args.quantized:
-        run_quantized(smoke=args.smoke)
+        run_quantized(smoke=args.smoke, out=args.out or "BENCH_recall.json")
     else:
-        run()
+        run(out=args.out or "BENCH_recall_table1.json")

@@ -1,0 +1,219 @@
+"""Bench-regression gate: compare BENCH_*.json metrics against baselines.
+
+CI's bench job runs the ``--smoke`` legs of bench_latency_load,
+bench_online_qps and bench_recall (each writes a BENCH_*.json in the shared
+schema of ``benchmarks/common.py``), then runs this checker against the
+committed ``benchmarks/baselines.json``:
+
+* QPS-like metrics (name contains ``qps`` or ``speedup``) fail on a
+  RELATIVE drop beyond ``--tolerance`` (default 0.25, i.e. >25% slower than
+  baseline fails — loose enough for runner-to-runner noise, tight enough to
+  catch a serving-path regression);
+* recall-like metrics (name contains ``recall``) fail on an ABSOLUTE drop
+  beyond ``--recall-tolerance`` (default 0.02);
+* other baseline metrics (latencies, bytes-per-vector) are reported but not
+  gated — they vary too much across runners to block merges; read them in
+  the uploaded artifact.
+
+Improvements never fail.  A baseline metric missing from the current run
+fails loudly (schema drift is a regression of the harness itself); bench
+files without a baseline entry are reported as unchecked.
+
+Refresh the committed baselines after an intentional perf change with::
+
+    python -m benchmarks.check_regression --update BENCH_*.json
+
+which rewrites ``benchmarks/baselines.json`` from the current run's files.
+
+Exit codes: 0 ok, 1 regression (or missing metric/file), 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from benchmarks.common import BENCH_SCHEMA_VERSION
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baselines.json")
+
+#: baseline keys gated relatively (higher is better, tolerance is a fraction)
+RELATIVE_MARKERS = ("qps", "speedup")
+#: baseline keys gated absolutely (higher is better, tolerance is additive)
+ABSOLUTE_MARKERS = ("recall",)
+
+
+def _kind(name: str) -> str:
+    low = name.lower()
+    if any(m in low for m in RELATIVE_MARKERS):
+        return "relative"
+    if any(m in low for m in ABSOLUTE_MARKERS):
+        return "absolute"
+    return "info"
+
+
+def load_bench_files(paths: list[str]) -> dict[str, dict]:
+    """{bench_name: payload} from BENCH_*.json files; newer schema rejected."""
+    out: dict[str, dict] = {}
+    for path in paths:
+        with open(path) as f:
+            payload = json.load(f)
+        version = int(payload.get("schema_version", 0))
+        if version > BENCH_SCHEMA_VERSION:
+            raise ValueError(
+                f"{path}: schema_version={version} is newer than this "
+                f"checker understands (max {BENCH_SCHEMA_VERSION})"
+            )
+        name = payload.get("bench")
+        if not name:
+            raise ValueError(f"{path}: missing 'bench' name")
+        out[name] = payload
+    return out
+
+
+def check(
+    current: dict[str, dict],
+    baselines: dict[str, dict],
+    *,
+    tolerance: float = 0.25,
+    recall_tolerance: float = 0.02,
+) -> tuple[list[str], list[str]]:
+    """Returns (failures, report_lines); empty failures == gate passes."""
+    failures: list[str] = []
+    lines: list[str] = []
+    for bench, base in sorted(baselines.items()):
+        cur = current.get(bench)
+        if cur is None:
+            failures.append(f"{bench}: no BENCH json produced for this bench")
+            continue
+        if "smoke" in base and bool(cur.get("smoke")) != bool(base["smoke"]):
+            # smoke and full runs use different corpus sizes/windows; gating
+            # one against baselines calibrated on the other is meaningless
+            failures.append(
+                f"{bench}: smoke={bool(cur.get('smoke'))} run checked "
+                f"against smoke={bool(base['smoke'])} baselines — "
+                "recalibrate with --update or run the matching leg"
+            )
+            continue
+        cur_metrics = cur.get("metrics", {})
+        for key, base_val in sorted(base.get("metrics", {}).items()):
+            if base_val is None:
+                continue
+            kind = _kind(key)
+            cur_val = cur_metrics.get(key)
+            if cur_val is None:
+                failures.append(
+                    f"{bench}.{key}: metric missing from current run "
+                    f"(baseline {base_val:.4g})"
+                )
+                continue
+            if kind == "relative":
+                floor = base_val * (1.0 - tolerance)
+                ok = cur_val >= floor
+                delta = (cur_val - base_val) / base_val if base_val else 0.0
+                verdict = "ok" if ok else "REGRESSION"
+                lines.append(
+                    f"{verdict:10s} {bench}.{key}: {cur_val:.4g} vs "
+                    f"baseline {base_val:.4g} ({delta:+.1%}, "
+                    f"floor {floor:.4g})"
+                )
+            elif kind == "absolute":
+                floor = base_val - recall_tolerance
+                ok = cur_val >= floor
+                verdict = "ok" if ok else "REGRESSION"
+                lines.append(
+                    f"{verdict:10s} {bench}.{key}: {cur_val:.4f} vs "
+                    f"baseline {base_val:.4f} (floor {floor:.4f})"
+                )
+            else:
+                ok = True
+                lines.append(
+                    f"{'info':10s} {bench}.{key}: {cur_val:.4g} "
+                    f"(baseline {base_val:.4g}, not gated)"
+                )
+            if not ok:
+                failures.append(lines[-1].strip())
+    for bench in sorted(set(current) - set(baselines)):
+        lines.append(f"{'unchecked':10s} {bench}: no baseline entry")
+    return failures, lines
+
+
+def update_baselines(current: dict[str, dict], baseline_path: str) -> dict:
+    """Refresh baselines from the current run (gated metric keys only).
+
+    MERGES into the existing baseline file: benches not present in the
+    current run keep their entries, so updating one bench cannot silently
+    disable the others' gates.
+    """
+    base: dict = {}
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            base = json.load(f)
+    for bench, payload in sorted(current.items()):
+        base[bench] = {
+            "smoke": payload.get("smoke", False),
+            "metrics": {
+                k: v for k, v in payload.get("metrics", {}).items()
+                if v is not None and _kind(k) != "info"
+            },
+        }
+    with open(baseline_path, "w") as f:
+        json.dump(base, f, indent=2)
+        f.write("\n")
+    return base
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare BENCH_*.json against committed baselines"
+    )
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json files (default: glob in cwd)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baselines json (default: benchmarks/baselines.json)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative QPS drop that fails (default 0.25)")
+    ap.add_argument("--recall-tolerance", type=float, default=0.02,
+                    help="absolute recall drop that fails (default 0.02)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline file from the current run")
+    args = ap.parse_args(argv)
+
+    files = args.files or sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("no BENCH_*.json files found", file=sys.stderr)
+        return 2
+    current = load_bench_files(files)
+
+    if args.update:
+        base = update_baselines(current, args.baseline)
+        print(f"baselines rewritten: {args.baseline}")
+        for bench, entry in base.items():
+            for k, v in entry["metrics"].items():
+                print(f"  {bench}.{k} = {v:.4g}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"baseline file not found: {args.baseline}", file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        baselines = json.load(f)
+    failures, lines = check(
+        current, baselines,
+        tolerance=args.tolerance, recall_tolerance=args.recall_tolerance,
+    )
+    print("\n".join(lines))
+    if failures:
+        print(f"\n{len(failures)} regression(s):", file=sys.stderr)
+        for fail in failures:
+            print(f"  {fail}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,13 +10,16 @@ spill trade-offs), which are scale-free.
 
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
 
-from repro.core import brute_force_topk
-
 ROWS = []
+
+#: BENCH_*.json schema version.  Bump on breaking layout changes;
+#: benchmarks/check_regression.py refuses newer-than-understood files.
+BENCH_SCHEMA_VERSION = 1
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -26,6 +29,46 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(row, flush=True)
 
 
+def bench_payload(
+    bench: str,
+    *,
+    config: dict | None = None,
+    metrics: dict | None = None,
+    rows: list | None = None,
+    smoke: bool = False,
+) -> dict:
+    """The one BENCH_*.json layout every benchmark emits.
+
+    ``metrics`` is the flat name->float dict that
+    ``benchmarks/check_regression.py`` gates CI on (QPS-like keys checked
+    with a relative drop tolerance, recall-like keys with an absolute one);
+    ``rows`` carries the full per-point detail (latency percentiles, batch
+    histograms, recall tables) for humans reading the workflow artifact.
+    """
+    metrics = {
+        k: (None if v is None else float(v))
+        for k, v in (metrics or {}).items()
+    }
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "bench": bench,
+        "smoke": bool(smoke),
+        "created_unix": time.time(),
+        "config": config or {},
+        "metrics": metrics,
+        "rows": rows or [],
+    }
+
+
+def write_bench_json(path: str, payload: dict) -> str:
+    """Atomic-enough single-shot write + a stdout pointer for CI logs."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"bench json written: {path}", flush=True)
+    return path
+
+
 def sift_like_corpus(n=20_000, d=64, n_queries=500, seed=0):
     from repro.data.synthetic import sift_like
 
@@ -33,6 +76,10 @@ def sift_like_corpus(n=20_000, d=64, n_queries=500, seed=0):
 
 
 def ground_truth(corpus, queries, k=100):
+    # lazy: keeps `import benchmarks.common` jax-free, so the regression
+    # checker (which only parses JSON) starts instantly
+    from repro.core import brute_force_topk
+
     return brute_force_topk(queries, corpus, k)
 
 

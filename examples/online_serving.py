@@ -71,3 +71,17 @@ fe_hit = float(np.mean([r.ids[0] == r.uid for r in done]))
 print(f"frontend: {len(done)} served in {frontend.stats['batches']} "
       f"micro-batches (mean {frontend.mean_batch_size:.1f}/batch), "
       f"self-match@1 = {fe_hit:.2f}")
+
+# ---- D. async host loop under a live arrival process ------------------------
+# the threaded frontend serves while a Poisson load generator submits;
+# latencies are end-to-end (submit -> results visible), the raw material of
+# the paper's Table 8 p99-vs-load curve (benchmarks/bench_latency_load.py
+# runs the full sweep).
+from repro.serve import run_load_point  # noqa: E402
+
+index.warm_traces(max_batch=4, topk=5)  # compile serving traces up front
+res = run_load_point(index, q_embs, process="poisson", rate_qps=200.0,
+                     duration_s=0.5, topk=5, max_batch=4, max_wait_ms=1.0)
+print(f"async loop: {res.completed} served at {res.achieved_qps:.0f} QPS "
+      f"(offered {res.offered_qps:.0f}), p50={res.p50_ms:.1f}ms "
+      f"p99={res.p99_ms:.1f}ms, mean batch {res.mean_batch:.1f}")

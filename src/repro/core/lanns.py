@@ -475,6 +475,62 @@ class LannsIndex:
 
     # -- query ---------------------------------------------------------------
 
+    def warm_traces(
+        self,
+        max_batch: int,
+        topk: int,
+        *,
+        ef: Optional[int] = None,
+    ) -> "LannsIndex":
+        """Pre-compile the serving trace set for batches up to ``max_batch``.
+
+        Online serving forms micro-batches of ANY size <= max_batch, and the
+        executor pads routed per-segment subsets to pow2 buckets — so the
+        first live traffic would otherwise pay one XLA compile per unseen
+        (subset-bucket, corpus-bucket) pair, hundreds of ms each, exactly the
+        latencies a p99 sweep measures.  The bucket grid makes the full set
+        enumerable: one ``query`` per pow2 batch size warms routing + merge +
+        the stacked-HNSW / q8 paths, and for fp32 scan partitions a direct
+        per-partition sweep covers every (pow2 subset, corpus bucket) combo
+        regardless of how routing happens to split the batch.
+
+        Coverage caveat: the per-partition sweep is exhaustive only for the
+        fp32 scan engine.  q8 and HNSW indexes get best-effort whole-batch
+        warming — their per-subset buckets depend on how routing splits each
+        dummy batch, so rare residual compiles remain possible on first
+        live traffic (extend the sweep to those executors before gating
+        their p99s).
+        """
+        parts = [p for p in self.partitions.values() if p.size > 0]
+        if not parts or max_batch < 1:
+            return self
+        cfg = self.config
+        dim = parts[0].vectors.shape[1]
+        qdim = dim - 1 if cfg.metric == "mips" else dim
+        rng = np.random.default_rng(0)
+        # iterate pow2 buckets up to next_pow2(max_batch): a live batch of
+        # max_batch pads to that bucket, so stopping at max_batch itself
+        # would leave the TOP bucket cold for non-pow2 max_batch.
+        b_top = next_pow2(max_batch)
+        dummy = rng.standard_normal((b_top, qdim)).astype(np.float32)
+        b = 1
+        while b <= b_top:
+            self.query(dummy[:b], topk, ef=ef)
+            b *= 2
+        if cfg.engine == "scan" and cfg.quantized == "none":
+            pstk = per_shard_topk(topk, cfg.num_shards, cfg.topk_confidence)
+            full = dummy
+            if cfg.metric == "mips":
+                full = np.concatenate(
+                    [dummy, np.zeros((len(dummy), 1), np.float32)], axis=1
+                )
+            for p in parts:
+                b = 1
+                while b <= b_top:
+                    p.search(full[:b], pstk, ef=ef)
+                    b *= 2
+        return self
+
     def query(
         self,
         queries: np.ndarray,
@@ -533,8 +589,13 @@ class LannsIndex:
             out_d = np.full((0, topk), np.inf, np.float32)
             out_i = np.full((0, topk), -1, np.int64)
             if return_stats:
+                merge_path = (
+                    "disjoint"
+                    if cfg.engine == "scan" and cfg.spill == "virtual"
+                    else "two_level"
+                )
                 return out_d, out_i, self._query_stats(
-                    pstk, np.zeros((0,), np.int64)
+                    pstk, np.zeros((0,), np.int64), merge_path
                 )
             return out_d, out_i
         seg_mask = self.partitioner.route_queries(queries)  # (B, m)
@@ -543,11 +604,16 @@ class LannsIndex:
         slot = np.cumsum(seg_mask, axis=1) - 1
         max_routes = max(int(segments_visited.max()), 1)
         # virtual spill stores each point in exactly ONE (shard, segment), so
-        # with the q8 scan engine (all partitions two-stage) candidate ids
-        # are disjoint across lanes: the lexsort dedup of merge_topk_vec is
-        # unnecessary and lanes can stay candidate-wide (rerank_factor *
-        # pstk exactly-scored rows each) for one dedup-free partial sort.
-        q8_fast = cfg.quantized == "q8" and cfg.spill == "virtual"
+        # scan-engine candidate ids are disjoint across lanes and the final
+        # merge needs no dedup — one partial sort over every candidate
+        # (merge_topk_disjoint_np) instead of the two-level lexsort merge.
+        # fp32 scan joined the q8 two-stage path here after its deprecation
+        # window (ROADMAP item; parity-tested in tests/test_lanns.py);
+        # physical spill (duplicate ids) and the HNSW engine keep
+        # merge_topk_vec.  q8 lanes additionally stay candidate-wide
+        # (rerank_factor * pstk exactly-scored rows each).
+        scan_virtual = cfg.engine == "scan" and cfg.spill == "virtual"
+        q8_fast = cfg.quantized == "q8" and scan_virtual
         lane_w = pstk
         if q8_fast:
             lane_w = min(
@@ -591,13 +657,17 @@ class LannsIndex:
                 )
                 cand_d[sel, s, sl, :pstk] = d
                 cand_i[sel, s, sl, :pstk] = i
-        if q8_fast and handled >= {
-            sg for sg, p in self.partitions.items() if p.size > 0
-        }:
-            # dedup-free merge over every exactly-scored candidate (a
-            # superset of what perShardTopK trimming would forward, so
-            # recall can only improve); physical spill (duplicate ids)
-            # takes the merge_topk_vec branch below instead.
+        use_disjoint = scan_virtual and (
+            not q8_fast
+            or handled >= {
+                sg for sg, p in self.partitions.items() if p.size > 0
+            }
+        )
+        if use_disjoint:
+            # dedup-free merge over every candidate (a superset of what
+            # perShardTopK trimming would forward, so recall can only
+            # improve); physical spill (duplicate ids) takes the
+            # merge_topk_vec branch below instead.
             out_d, out_i = merge_topk_disjoint_np(
                 cand_d.reshape(B, S * max_routes * lane_w),
                 cand_i.reshape(B, S * max_routes * lane_w),
@@ -634,11 +704,14 @@ class LannsIndex:
                 np.inf,
             )
         if return_stats:
-            return out_d, out_i, self._query_stats(pstk, segments_visited)
+            return out_d, out_i, self._query_stats(
+                pstk, segments_visited,
+                "disjoint" if use_disjoint else "two_level",
+            )
         return out_d, out_i
 
     @staticmethod
-    def _query_stats(pstk, segments_visited):
+    def _query_stats(pstk, segments_visited, merge_path="two_level"):
         """Routing/trace stats dict — one schema for empty and non-empty
         batches (dashboards index these keys unconditionally)."""
         from repro.core import hnsw as hnsw_mod
@@ -649,6 +722,10 @@ class LannsIndex:
         empty = segments_visited.size == 0
         return {
             "per_shard_topk": pstk,
+            # which final-merge implementation served the batch: 'disjoint'
+            # (dedup-free partial sort; scan engine + virtual spill) or
+            # 'two_level' (lexsort dedup merge).
+            "merge_path": merge_path,
             "mean_segments_visited":
                 0.0 if empty else float(segments_visited.mean()),
             "max_segments_visited":

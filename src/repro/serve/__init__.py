@@ -1,1 +1,23 @@
-"""Online serving substrate: LANNS retrieval on the mesh, KV-cache decode."""
+"""Online serving substrate: LANNS retrieval on the mesh, KV-cache decode,
+micro-batching front ends (sync + threaded async), and arrival-process load
+generation for p99-vs-load sweeps."""
+
+from repro.serve.engine import AnnFrontend, AnnRequest, AsyncAnnFrontend
+from repro.serve.loadgen import (
+    LoadResult,
+    arrival_gaps,
+    measure_saturation_qps,
+    run_load_point,
+    sweep_load,
+)
+
+__all__ = [
+    "AnnFrontend",
+    "AnnRequest",
+    "AsyncAnnFrontend",
+    "LoadResult",
+    "arrival_gaps",
+    "measure_saturation_qps",
+    "run_load_point",
+    "sweep_load",
+]

@@ -1,0 +1,271 @@
+"""Arrival-process load generation over the async ANN front end.
+
+The paper's headline serving numbers (Table 8: ~2.5K QPS/node with few-ms
+p99, degrading as offered load approaches saturation) are statements about
+latency UNDER A LIVE ARRIVAL PROCESS, not about closed-loop batch
+throughput.  This module supplies that arrival process:
+
+* ``poisson`` — open loop, exponential inter-arrival gaps at ``rate_qps``
+  (memoryless arrivals, the standard web-traffic model and what Table 8's
+  offered-load axis means);
+* ``fixed`` — open loop, deterministic ``1/rate_qps`` gaps (isolates
+  queueing effects from arrival burstiness);
+* ``closed`` — ``concurrency`` synchronous clients, each submitting its
+  next query the moment the previous one completes.  Offered load is
+  implicit; the achieved QPS at high concurrency IS the saturation
+  throughput, which anchors the open-loop sweep's load axis.
+
+Open-loop generation is the honest protocol for percentiles: arrivals keep
+coming while the system is slow, so queueing delay lands in the measured
+latencies instead of silently throttling the generator (the coordinated-
+omission trap of closed-loop measurement).
+
+Gap sequences are pure functions of ``(process, rate, n, seed)`` —
+``arrival_gaps`` is reproducible across runs and machines (seeding asserted
+in tests/test_async_frontend.py); only the service times vary with the
+host.  Every completed request carries end-to-end timestamps from
+``AsyncAnnFrontend``, so a ``LoadResult`` reports p50/p95/p99 latency,
+achieved QPS, and the formed-batch histogram per offered-load point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import AsyncAnnFrontend
+
+PROCESSES = ("poisson", "fixed", "closed")
+
+
+def arrival_gaps(
+    process: str, rate_qps: float, n: int, seed: int = 0
+) -> np.ndarray:
+    """(n,) inter-arrival gaps in seconds; deterministic in ``seed``."""
+    if process not in ("poisson", "fixed"):
+        raise ValueError(
+            f"process={process!r} has no gap sequence — expected 'poisson' "
+            "or 'fixed' ('closed' is driven by completions, not a clock)"
+        )
+    if rate_qps <= 0:
+        raise ValueError(f"rate_qps={rate_qps} must be > 0")
+    if process == "fixed":
+        return np.full(n, 1.0 / rate_qps)
+    rng = np.random.default_rng(seed)
+    return rng.exponential(1.0 / rate_qps, n)
+
+
+@dataclasses.dataclass
+class LoadResult:
+    """One offered-load point: what the bench JSON and the sweep report."""
+
+    process: str
+    offered_qps: float  # nan for closed loop (load is implicit)
+    concurrency: int  # 0 for open loop
+    duration_s: float  # submission window (drain time excluded)
+    elapsed_s: float  # window + drain — the QPS denominator
+    submitted: int
+    completed: int
+    cancelled: int
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    mean_ms: float
+    max_ms: float
+    mean_queue_ms: float  # batching/queueing share of the latency
+    achieved_qps: float
+    mean_batch: float
+    batch_hist: dict[int, int]
+
+    def row(self) -> dict:
+        """Strict-JSON-ready dict: batch_hist keys stringified, non-finite
+        floats (closed-loop offered_qps, empty-percentile NaNs) -> null."""
+        out = {
+            k: (None if isinstance(v, float) and not math.isfinite(v) else v)
+            for k, v in dataclasses.asdict(self).items()
+        }
+        out["batch_hist"] = {str(k): v for k, v in sorted(
+            self.batch_hist.items()
+        )}
+        return out
+
+
+def _summarize(
+    fe: AsyncAnnFrontend,
+    *,
+    process: str,
+    offered_qps: float,
+    concurrency: int,
+    duration_s: float,
+    elapsed_s: float,
+) -> LoadResult:
+    done = [r for r in fe.completed if r.done]
+    lat = np.array([r.latency_s for r in done], np.float64)
+    queue = np.array([r.queue_s for r in done], np.float64)
+    has = lat.size > 0
+    pct = (
+        np.percentile(lat, (50, 95, 99)) if has else np.full(3, np.nan)
+    )
+    return LoadResult(
+        process=process,
+        offered_qps=float(offered_qps),
+        concurrency=concurrency,
+        duration_s=float(duration_s),
+        elapsed_s=float(elapsed_s),
+        submitted=fe.stats["submitted"],
+        completed=len(done),
+        cancelled=fe.stats["submitted"] - len(done),
+        p50_ms=1e3 * float(pct[0]),
+        p95_ms=1e3 * float(pct[1]),
+        p99_ms=1e3 * float(pct[2]),
+        mean_ms=1e3 * float(lat.mean()) if has else float("nan"),
+        max_ms=1e3 * float(lat.max()) if has else float("nan"),
+        mean_queue_ms=1e3 * float(queue.mean()) if has else float("nan"),
+        achieved_qps=len(done) / max(elapsed_s, 1e-12),
+        mean_batch=fe.mean_batch_size,
+        batch_hist=dict(fe.batch_hist),
+    )
+
+
+def run_load_point(
+    index,
+    queries: np.ndarray,
+    *,
+    process: str = "poisson",
+    rate_qps: Optional[float] = None,
+    concurrency: int = 8,
+    duration_s: float = 1.0,
+    seed: int = 0,
+    topk: int = 100,
+    max_batch: int = 64,
+    max_wait_ms: float = 2.0,
+    ef: Optional[int] = None,
+    collect_stats: bool = False,
+) -> LoadResult:
+    """Drive one offered-load point end to end and summarize it.
+
+    Builds a fresh ``AsyncAnnFrontend`` (clean stats), submits arrivals for
+    ``duration_s`` seconds under the chosen process, then drains — so every
+    submitted query's completion (including queueing built up past
+    saturation) is measured.  Queries cycle through ``queries`` rows.
+    """
+    if process not in PROCESSES:
+        raise ValueError(f"process={process!r} — expected one of {PROCESSES}")
+    fe = AsyncAnnFrontend(
+        index, topk=topk, max_batch=max_batch, max_wait_ms=max_wait_ms,
+        ef=ef, collect_stats=collect_stats,
+    )
+    n_pool = len(queries)
+    fe.start()
+    t0 = time.perf_counter()
+    try:
+        if process == "closed":
+            stop_at = t0 + duration_s
+
+            def client(ci: int):
+                qi = ci
+                while time.perf_counter() < stop_at:
+                    req = fe.submit(queries[qi % n_pool])
+                    qi += concurrency
+                    req.wait()
+
+            threads = [
+                threading.Thread(target=client, args=(ci,), daemon=True)
+                for ci in range(concurrency)
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        else:
+            if rate_qps is None:
+                raise ValueError(f"process={process!r} requires rate_qps")
+            concurrency = 0
+            # pre-draw the schedule (reproducible); recycle if the window
+            # overruns the draw (only when achieved arrivals exceed 1.5x
+            # the expected count).
+            n_gaps = max(16, math.ceil(1.5 * rate_qps * duration_s))
+            gaps = arrival_gaps(process, rate_qps, n_gaps, seed)
+            deadline = t0 + duration_s
+            t_next = t0 + gaps[0]
+            gi, qi = 1, 0
+            while True:
+                now = time.perf_counter()
+                if now >= deadline:
+                    break
+                if now >= t_next:
+                    fe.submit(queries[qi % n_pool])
+                    qi += 1
+                    t_next += gaps[gi % len(gaps)]
+                    gi += 1
+                else:
+                    time.sleep(min(t_next - now, 2e-3))
+    finally:
+        fe.stop(drain=True)
+    elapsed = time.perf_counter() - t0
+    return _summarize(
+        fe,
+        process=process,
+        offered_qps=float("nan") if process == "closed" else rate_qps,
+        concurrency=concurrency,
+        duration_s=duration_s,
+        elapsed_s=elapsed,
+    )
+
+
+def measure_saturation_qps(
+    index,
+    queries: np.ndarray,
+    *,
+    duration_s: float = 1.0,
+    concurrency: Optional[int] = None,
+    **kw,
+) -> LoadResult:
+    """Closed-loop saturation point: anchors the open-loop sweep's axis.
+
+    With enough synchronous clients to keep full micro-batches forming
+    (default 2x max_batch), the achieved QPS is the node's capacity; open-
+    loop points are then swept as fractions of it.
+    """
+    mb = kw.get("max_batch", 64)
+    return run_load_point(
+        index, queries, process="closed",
+        concurrency=concurrency or 2 * mb, duration_s=duration_s, **kw,
+    )
+
+
+def sweep_load(
+    index,
+    queries: np.ndarray,
+    *,
+    load_fracs: Sequence[float] = (0.25, 0.5, 0.75, 0.9, 1.1),
+    process: str = "poisson",
+    duration_s: float = 1.0,
+    saturation: Optional[LoadResult] = None,
+    seed: int = 0,
+    **kw,
+) -> tuple[LoadResult, list[LoadResult]]:
+    """Measure saturation, then sweep offered load as fractions of it.
+
+    Returns ``(saturation_point, open_loop_points)`` — the raw material of
+    the paper's Table 8 (p99 vs offered load, including one point past
+    saturation where queueing delay dominates).
+    """
+    if saturation is None:
+        saturation = measure_saturation_qps(
+            index, queries, duration_s=duration_s, **kw
+        )
+    points = [
+        run_load_point(
+            index, queries, process=process,
+            rate_qps=max(frac * saturation.achieved_qps, 1.0),
+            duration_s=duration_s, seed=seed + pi, **kw,
+        )
+        for pi, frac in enumerate(load_fracs)
+    ]
+    return saturation, points

@@ -1,0 +1,313 @@
+"""Async host loop: determinism vs sync step(), loadgen seeding, shutdown.
+
+The acceptance contract of the threaded front end is that threading changes
+WHEN work happens, never WHAT is computed: for identical formed batches the
+results are bit-identical to the synchronous ``step()`` path (same
+``_execute``), arrival schedules are pure functions of their seed, and
+shutdown either drains (every in-flight query answered) or cancels (every
+waiter released) — nothing blocks forever.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import LannsConfig, LannsIndex
+from repro.data.synthetic import clustered_vectors
+from repro.serve.engine import AnnFrontend, AsyncAnnFrontend
+from repro.serve.loadgen import (
+    arrival_gaps,
+    measure_saturation_qps,
+    run_load_point,
+)
+
+# generous CI margin: every wait in this file bounds a thread the test has
+# already made runnable, so the timeout only matters on a wedged box
+WAIT_S = 30.0
+
+
+@pytest.fixture(scope="module")
+def index_and_queries():
+    data = clustered_vectors(1500, 16, n_clusters=16, seed=0)
+    queries = clustered_vectors(48, 16, n_clusters=16, seed=1)
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                      engine="scan")
+    idx = LannsIndex(cfg).build(data)
+    idx.warm_traces(8, 10)
+    return idx, queries
+
+
+def test_bit_identical_to_sync_step(index_and_queries):
+    """Same formed batches (FIFO slices of max_batch) => bit-identical
+    results, per request, against both the sync frontend and direct query."""
+    idx, queries = index_and_queries
+    sync = AnnFrontend(idx, topk=10, max_batch=8, max_wait_ms=1e9)
+    sreqs = [sync.submit(q) for q in queries[:40]]
+    sync.step()  # five full batches
+    with AsyncAnnFrontend(idx, topk=10, max_batch=8, max_wait_ms=1e9) as fe:
+        areqs = [fe.submit(q) for q in queries[:40]]
+        assert all(r.wait(WAIT_S) for r in areqs)
+    assert all(r.done for r in areqs)
+    for a, s in zip(areqs, sreqs):
+        assert np.array_equal(a.ids, s.ids)
+        assert np.array_equal(a.dists, s.dists)
+    # and against the raw executor on the same formed batches
+    for lo in range(0, 40, 8):
+        d, i = idx.query(queries[lo: lo + 8], 10)
+        got_d = np.stack([r.dists for r in areqs[lo: lo + 8]])
+        got_i = np.stack([r.ids for r in areqs[lo: lo + 8]])
+        assert np.array_equal(got_i, np.asarray(i))
+        assert np.array_equal(got_d, np.asarray(d))
+
+
+def test_deadline_flush_without_new_submits(index_and_queries):
+    """The batcher thread wakes ITSELF at the max_wait deadline — a partial
+    batch completes with no further submissions and no step() calls."""
+    idx, queries = index_and_queries
+    fe = AsyncAnnFrontend(idx, topk=5, max_batch=64, max_wait_ms=20.0)
+    fe.start()
+    try:
+        reqs = [fe.submit(q) for q in queries[:3]]
+        assert all(r.wait(WAIT_S) for r in reqs)
+        assert all(r.done for r in reqs)
+        assert fe.stats["deadline_batches"] >= 1
+        assert reqs[0].batch_size == 3
+    finally:
+        fe.stop()
+
+
+def test_timestamps_ordered(index_and_queries):
+    idx, queries = index_and_queries
+    with AsyncAnnFrontend(idx, topk=5, max_batch=4, max_wait_ms=5.0) as fe:
+        reqs = [fe.submit(q) for q in queries[:4]]
+        assert all(r.wait(WAIT_S) for r in reqs)
+    for r in reqs:
+        assert r.t_submit <= r.t_start <= r.t_done
+        assert r.latency_s >= r.queue_s >= 0.0
+
+
+def test_graceful_drain_with_in_flight(index_and_queries):
+    """stop(drain=True) answers everything pending — max_wait is effectively
+    infinite here, so ONLY the drain path can complete these."""
+    idx, queries = index_and_queries
+    fe = AsyncAnnFrontend(idx, topk=5, max_batch=8, max_wait_ms=1e9)
+    fe.start()
+    reqs = [fe.submit(q) for q in queries[:21]]
+    completed = fe.stop(drain=True)
+    assert all(r.done for r in reqs)
+    assert not any(r.cancelled for r in reqs)
+    assert len(completed) == 21
+    # 21 = 2 full batches of 8 + one forced remainder of 5
+    assert fe.batch_hist.get(8) == 2 and fe.batch_hist.get(5) == 1
+
+
+def test_stop_without_drain_cancels(index_and_queries):
+    idx, queries = index_and_queries
+    fe = AsyncAnnFrontend(idx, topk=5, max_batch=64, max_wait_ms=1e9)
+    fe.start()
+    reqs = [fe.submit(q) for q in queries[:3]]
+    fe.stop(drain=False)
+    assert all(r.wait(WAIT_S) for r in reqs)  # events fire on cancel too
+    assert all(r.cancelled and not r.done for r in reqs)
+    with pytest.raises(RuntimeError):
+        fe.submit(queries[0])
+
+
+def test_stop_without_drain_beats_full_queue(index_and_queries):
+    """Even with >= max_batch pending, stop(drain=False) cancels instead of
+    serving full batches (the cancel-stop has priority in the loop)."""
+    idx, queries = index_and_queries
+    fe = AsyncAnnFrontend(idx, topk=5, max_batch=4, max_wait_ms=1e9)
+    fe.start()
+    # submit under the lock-free API fast; some may already be served before
+    # stop lands, but everything NOT served must be cancelled, never stuck
+    reqs = [fe.submit(q) for q in queries[:32]]
+    fe.stop(drain=False, timeout=WAIT_S)
+    assert all(r.wait(WAIT_S) for r in reqs)
+    for r in reqs:
+        assert r.done != r.cancelled  # exactly one outcome, none stranded
+    assert any(r.cancelled for r in reqs)  # 32 can't all finish pre-stop
+
+
+def test_lifecycle_errors(index_and_queries):
+    idx, queries = index_and_queries
+    fe = AsyncAnnFrontend(idx, topk=5, max_batch=8)
+    with pytest.raises(RuntimeError):  # not started
+        fe.submit(queries[0])
+    fe.start()
+    with pytest.raises(RuntimeError):  # double start
+        fe.start()
+    with pytest.raises(RuntimeError):  # driven by its own thread
+        fe.step()
+    with pytest.raises(RuntimeError):
+        fe.flush()
+    fe.stop()
+    # restartable after a clean stop
+    fe.start()
+    req = fe.submit(queries[0])
+    fe.stop(drain=True)
+    assert req.done
+
+
+def test_batcher_crash_releases_all_waiters(index_and_queries):
+    """A query() crash must cancel the in-flight batch AND everything still
+    pending (waiters wake), surface on the next submit, and never hang."""
+    idx, queries = index_and_queries
+
+    class Boom:
+        def query(self, *a, **kw):
+            # linger before raising so the OTHER submissions are pending
+            # when the crash lands (deterministic regardless of scheduling)
+            time.sleep(0.2)
+            raise ValueError("boom")
+
+    fe = AsyncAnnFrontend(Boom(), topk=5, max_batch=2, max_wait_ms=1e9)
+    fe.start()
+    # 5 submissions, max_batch=2: the first full batch crashes; the other 3
+    # are still pending at crash time and must be cancelled, not stranded
+    reqs = [fe.submit(q) for q in queries[:5]]
+    assert all(r.wait(WAIT_S) for r in reqs)
+    assert all(r.cancelled and not r.done for r in reqs)
+    with pytest.raises(RuntimeError, match="batcher thread died"):
+        fe.submit(queries[0])
+    fe.stop()
+
+
+def test_restart_after_crash_is_clean(index_and_queries):
+    """stop() + start() after a crash clears the stale error and completed
+    list — the restarted frontend serves normally."""
+    idx, queries = index_and_queries
+
+    class Flaky:
+        def __init__(self, real):
+            self.real, self.broken = real, True
+
+        def query(self, *a, **kw):
+            if self.broken:
+                raise ValueError("boom")
+            return self.real.query(*a, **kw)
+
+    flaky = Flaky(idx)
+    fe = AsyncAnnFrontend(flaky, topk=5, max_batch=2, max_wait_ms=1e9)
+    fe.start()
+    bad = [fe.submit(q) for q in queries[:2]]
+    assert all(r.wait(WAIT_S) for r in bad) and fe.error is not None
+    fe.stop()
+    flaky.broken = False
+    fe.start()
+    assert fe.error is None and fe.completed == []
+    good = fe.submit(queries[0])
+    completed = fe.stop(drain=True)
+    assert good.done and not good.cancelled
+    assert completed == [good]
+
+
+def test_collect_stats_flow_through(index_and_queries):
+    """Routing/trace stats reach the async frontend exactly as in sync mode
+    (the signal source for online alpha/capacity auto-tuning)."""
+    idx, queries = index_and_queries
+    with AsyncAnnFrontend(idx, topk=5, max_batch=8, max_wait_ms=5.0,
+                          collect_stats=True) as fe:
+        reqs = [fe.submit(q) for q in queries[:8]]
+        assert all(r.wait(WAIT_S) for r in reqs)
+    qs = fe.last_query_stats
+    assert qs is not None
+    assert qs["per_shard_topk"] <= 5
+    assert qs["merge_path"] == "disjoint"  # scan engine + virtual spill
+    assert "beam_traces" in qs and "scan_traces" in qs
+    assert 1.0 <= fe.mean_segments_visited <= idx.config.num_segments
+
+
+def test_concurrent_submitters(index_and_queries):
+    """submit() is thread-safe: N producer threads, every request answered
+    exactly once, uids unique."""
+    idx, queries = index_and_queries
+    with AsyncAnnFrontend(idx, topk=5, max_batch=8, max_wait_ms=2.0) as fe:
+        out: list = []
+        lock = threading.Lock()
+
+        def producer(ci):
+            reqs = [fe.submit(queries[(ci * 12 + j) % len(queries)])
+                    for j in range(12)]
+            with lock:
+                out.extend(reqs)
+
+        threads = [threading.Thread(target=producer, args=(ci,))
+                   for ci in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert all(r.wait(WAIT_S) for r in out)
+    assert len(out) == 48 and all(r.done for r in out)
+    assert len({r.uid for r in out}) == 48
+    assert fe.stats["completed"] == 48
+    assert sum(b * c for b, c in fe.batch_hist.items()) == 48
+
+
+# ---------------------------------------------------------------------------
+# loadgen: arrival-process seeding + end-to-end load points
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_gaps_seeding_reproducible():
+    g1 = arrival_gaps("poisson", 100.0, 64, seed=7)
+    g2 = arrival_gaps("poisson", 100.0, 64, seed=7)
+    g3 = arrival_gaps("poisson", 100.0, 64, seed=8)
+    assert np.array_equal(g1, g2)
+    assert not np.array_equal(g1, g3)
+    assert (g1 > 0).all()
+    # mean inter-arrival ~ 1/rate (loose: 64 exponential draws)
+    assert 0.3 / 100 < g1.mean() < 3.0 / 100
+    fixed = arrival_gaps("fixed", 50.0, 8)
+    assert np.allclose(fixed, 1.0 / 50)
+
+
+def test_arrival_gaps_validation():
+    with pytest.raises(ValueError):
+        arrival_gaps("closed", 100.0, 8)
+    with pytest.raises(ValueError):
+        arrival_gaps("poisson", 0.0, 8)
+    with pytest.raises(ValueError):
+        arrival_gaps("weibull", 100.0, 8)
+
+
+def test_run_load_point_poisson(index_and_queries):
+    idx, queries = index_and_queries
+    res = run_load_point(
+        idx, queries, process="poisson", rate_qps=300.0, duration_s=0.3,
+        topk=5, max_batch=8, max_wait_ms=2.0, seed=3,
+    )
+    assert res.process == "poisson" and res.offered_qps == 300.0
+    assert res.completed > 0 and res.cancelled == 0
+    assert res.completed == res.submitted
+    assert res.achieved_qps > 0
+    assert np.isfinite([res.p50_ms, res.p95_ms, res.p99_ms]).all()
+    assert res.p50_ms <= res.p95_ms <= res.p99_ms
+    assert sum(b * c for b, c in res.batch_hist.items()) == res.completed
+    # row() is JSON-ready (the BENCH_latency_load.json contract)
+    encoded = json.dumps(res.row())
+    assert "p99_ms" in encoded and "batch_hist" in encoded
+
+
+def test_run_load_point_closed(index_and_queries):
+    idx, queries = index_and_queries
+    res = measure_saturation_qps(
+        idx, queries, duration_s=0.3, topk=5, max_batch=8, max_wait_ms=2.0,
+        concurrency=4,
+    )
+    assert res.process == "closed" and res.concurrency == 4
+    assert np.isnan(res.offered_qps)  # load is implicit in closed loop
+    assert res.completed > 0 and res.cancelled == 0
+    assert res.mean_batch <= 8
+
+
+def test_run_load_point_validation(index_and_queries):
+    idx, queries = index_and_queries
+    with pytest.raises(ValueError):
+        run_load_point(idx, queries, process="poisson", rate_qps=None)
+    with pytest.raises(ValueError):
+        run_load_point(idx, queries, process="uniform", rate_qps=10.0)

@@ -1,0 +1,155 @@
+"""Bench-regression gate logic (benchmarks/check_regression.py).
+
+CI trusts this checker to block QPS regressions — so the checker itself is
+tier-1 tested: drop detection on relative (qps/speedup) and absolute
+(recall) metrics, improvement tolerance, schema-drift failures, and the
+--update refresh path.
+"""
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import (
+    check,
+    load_bench_files,
+    main,
+    update_baselines,
+)
+from benchmarks.common import BENCH_SCHEMA_VERSION, bench_payload
+
+
+def _payload(metrics, bench="online_qps"):
+    return bench_payload(bench, metrics=metrics, smoke=True)
+
+
+def _baseline(metrics, bench="online_qps"):
+    return {bench: {"smoke": True, "metrics": metrics}}
+
+
+def test_pass_within_tolerance():
+    cur = {"online_qps": _payload({"qps_offline_b64": 800.0})}
+    base = _baseline({"qps_offline_b64": 1000.0})
+    failures, lines = check(cur, base, tolerance=0.25)
+    assert failures == []
+    assert any("ok" in ln for ln in lines)
+
+
+def test_fail_beyond_qps_tolerance():
+    cur = {"online_qps": _payload({"qps_offline_b64": 700.0})}
+    base = _baseline({"qps_offline_b64": 1000.0})
+    failures, _ = check(cur, base, tolerance=0.25)
+    assert len(failures) == 1
+    assert "qps_offline_b64" in failures[0]
+
+
+def test_improvement_never_fails():
+    cur = {"online_qps": _payload(
+        {"qps_offline_b64": 5000.0, "recall_q8": 0.99}
+    )}
+    base = _baseline({"qps_offline_b64": 1000.0, "recall_q8": 0.80})
+    failures, _ = check(cur, base)
+    assert failures == []
+
+
+def test_recall_absolute_tolerance():
+    base = _baseline({"recall_q8": 0.80})
+    ok = {"online_qps": _payload({"recall_q8": 0.79})}
+    bad = {"online_qps": _payload({"recall_q8": 0.75})}
+    assert check(ok, base, recall_tolerance=0.02)[0] == []
+    failures, _ = check(bad, base, recall_tolerance=0.02)
+    assert len(failures) == 1 and "recall_q8" in failures[0]
+
+
+def test_smoke_flag_mismatch_fails():
+    """A full-scale run must not be gated against smoke-calibrated
+    baselines (different corpus sizes/windows)."""
+    cur = {"online_qps": bench_payload(
+        "online_qps", metrics={"qps_offline_b64": 1e6}, smoke=False,
+    )}
+    base = _baseline({"qps_offline_b64": 1000.0})  # calibrated smoke=True
+    failures, _ = check(cur, base)
+    assert len(failures) == 1 and "smoke" in failures[0]
+
+
+def test_missing_metric_fails():
+    cur = {"online_qps": _payload({"qps_other": 1.0})}
+    base = _baseline({"qps_offline_b64": 1000.0})
+    failures, _ = check(cur, base)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_missing_bench_file_fails():
+    base = _baseline({"qps_offline_b64": 1000.0}, bench="latency_load")
+    failures, _ = check({}, base)
+    assert len(failures) == 1 and "latency_load" in failures[0]
+
+
+def test_info_metrics_not_gated():
+    """Latency/bytes metrics report but never fail (runner variance)."""
+    cur = {"online_qps": _payload({"p99_ms_half_load": 100.0})}
+    base = _baseline({"p99_ms_half_load": 1.0})
+    failures, lines = check(cur, base)
+    assert failures == []
+    assert any("not gated" in ln for ln in lines)
+
+
+def test_newer_schema_rejected(tmp_path):
+    path = tmp_path / "BENCH_x.json"
+    payload = _payload({"qps_a": 1.0})
+    payload["schema_version"] = BENCH_SCHEMA_VERSION + 1
+    path.write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="schema_version"):
+        load_bench_files([str(path)])
+
+
+def test_update_roundtrip(tmp_path):
+    """--update writes only gated metrics; a fresh check then passes."""
+    cur = {"online_qps": _payload(
+        {"qps_offline_b64": 1234.5, "recall_q8": 0.9, "p99_ms": 3.0}
+    )}
+    bpath = tmp_path / "baselines.json"
+    written = update_baselines(cur, str(bpath))
+    assert "p99_ms" not in written["online_qps"]["metrics"]
+    reloaded = json.loads(bpath.read_text())
+    assert reloaded["online_qps"]["metrics"]["qps_offline_b64"] == 1234.5
+    failures, _ = check(cur, reloaded)
+    assert failures == []
+
+
+def test_update_merges_existing_baselines(tmp_path):
+    """--update with a subset of benches must not erase the other benches'
+    entries (that would silently disable their gates)."""
+    bpath = tmp_path / "baselines.json"
+    bpath.write_text(json.dumps({
+        "recall": {"smoke": True, "metrics": {"recall_q8": 0.8}},
+        "online_qps": {"smoke": True, "metrics": {"qps_offline_b64": 1.0}},
+    }))
+    update_baselines(
+        {"online_qps": _payload({"qps_offline_b64": 2000.0})}, str(bpath)
+    )
+    reloaded = json.loads(bpath.read_text())
+    assert reloaded["online_qps"]["metrics"]["qps_offline_b64"] == 2000.0
+    assert reloaded["recall"]["metrics"]["recall_q8"] == 0.8  # preserved
+
+
+def test_main_end_to_end(tmp_path, capsys):
+    """CLI: pass -> 0, regression -> 1, no files -> 2."""
+    bench = tmp_path / "BENCH_online_qps.json"
+    bench.write_text(json.dumps(_payload({"qps_offline_b64": 1000.0})))
+    bpath = tmp_path / "baselines.json"
+    bpath.write_text(json.dumps(_baseline({"qps_offline_b64": 1000.0})))
+    assert main([str(bench), "--baseline", str(bpath)]) == 0
+    assert "PASS" in capsys.readouterr().out
+
+    bench.write_text(json.dumps(_payload({"qps_offline_b64": 10.0})))
+    assert main([str(bench), "--baseline", str(bpath)]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_main_no_files_is_usage_error(tmp_path, monkeypatch, capsys):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    monkeypatch.chdir(empty)
+    assert main([]) == 2
+    assert "no BENCH" in capsys.readouterr().err

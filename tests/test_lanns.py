@@ -72,6 +72,115 @@ def test_physical_vs_virtual_spill(corpus):
     assert abs(rv["physical"] - rv["virtual"]) < 0.1
 
 
+def _two_level_reference(idx, queries, topk):
+    """Replay the PRE-FLIP fp32 scan merge: per-partition top-pstk candidates
+    into compact route slots, then the two-level lexsort-dedup merge
+    (merge_topk_vec) — the path the disjoint flip replaced for virtual
+    spill.  Kept here as the parity oracle (ROADMAP deprecation-window
+    item)."""
+    from repro.core.merge import merge_topk_vec, per_shard_topk
+
+    cfg = idx.config
+    queries = np.asarray(queries, np.float32)
+    B, S = queries.shape[0], cfg.num_shards
+    pstk = per_shard_topk(topk, S, cfg.topk_confidence)
+    seg_mask = idx.partitioner.route_queries(queries)
+    slot = np.cumsum(seg_mask, axis=1) - 1
+    max_routes = max(int(seg_mask.sum(axis=1).max()), 1)
+    cand_d = np.full((B, S, max_routes, pstk), np.inf, np.float32)
+    cand_i = np.full((B, S, max_routes, pstk), -1, np.int64)
+    for g in range(cfg.num_segments):
+        sel = np.nonzero(seg_mask[:, g])[0]
+        if sel.size == 0:
+            continue
+        for s in range(S):
+            part = idx.partitions.get((s, g))
+            if part is None or part.size == 0:
+                continue
+            d, i = part.search(queries[sel], pstk)
+            cand_d[sel, s, slot[sel, g]] = d
+            cand_i[sel, s, slot[sel, g]] = i
+    shard_d, shard_i = merge_topk_vec(
+        cand_d.reshape(B * S, max_routes * pstk),
+        cand_i.reshape(B * S, max_routes * pstk), pstk,
+    )
+    return merge_topk_vec(
+        shard_d.reshape(B, S * pstk), shard_i.reshape(B, S * pstk), topk
+    )
+
+
+def test_scan_disjoint_merge_parity_single_shard(corpus):
+    """S=1: perShardTopK never trims, so the dedup-free disjoint merge must
+    reproduce the old two-lexsort merge bit-for-bit."""
+    data, queries, _ = corpus
+    cfg = LannsConfig(num_shards=1, num_segments=8, segmenter="apd",
+                      engine="scan", alpha=0.15)
+    idx = LannsIndex(cfg).build(data)
+    d_new, i_new, stats = idx.query(queries, 20, return_stats=True)
+    assert stats["merge_path"] == "disjoint"
+    d_old, i_old = _two_level_reference(idx, queries, 20)
+    assert np.array_equal(i_new, i_old)
+    assert np.array_equal(d_new, d_old)
+
+
+def test_scan_disjoint_merge_parity_multi_shard(corpus):
+    """S=2: the flat merge forwards MORE than perShardTopK would, so
+    distances can only improve (element-wise <=), and agree wherever the
+    trim didn't bind."""
+    data, queries, (td, ti) = corpus
+    cfg = LannsConfig(num_shards=2, num_segments=4, segmenter="apd",
+                      engine="scan", alpha=0.15)
+    idx = LannsIndex(cfg).build(data)
+    d_new, i_new = idx.query(queries, 20)
+    d_old, i_old = _two_level_reference(idx, queries, 20)
+    finite = np.isfinite(d_old)
+    assert (d_new[finite] <= d_old[finite] + 1e-6).all()
+    same = d_new == d_old
+    assert same.mean() > 0.9  # the trim binds rarely at this scale
+    assert np.array_equal(i_new[same], i_old[same])
+    assert recall_at_k(i_new, ti, 15) >= recall_at_k(i_old, ti, 15) - 1e-9
+
+
+def test_physical_spill_keeps_dedup_merge(corpus):
+    """Physical spill duplicates points across segments — the dedup-free
+    path must NOT serve it, and duplicate ids must still collapse."""
+    data, queries, _ = corpus
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                      spill="physical", engine="scan")
+    idx = LannsIndex(cfg).build(data)
+    d, i, stats = idx.query(queries, 20, return_stats=True)
+    assert stats["merge_path"] == "two_level"
+    for row in i:
+        real = row[row >= 0]
+        assert len(np.unique(real)) == len(real)
+
+
+def test_hnsw_keeps_two_level_merge(corpus):
+    data, queries, _ = corpus
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                      engine="hnsw", hnsw_m=8, ef_construction=40,
+                      ef_search=40)
+    idx = LannsIndex(cfg).build(data)
+    _, _, stats = idx.query(queries[:8], 10, return_stats=True)
+    assert stats["merge_path"] == "two_level"
+
+
+def test_warm_traces_covers_live_batches(corpus):
+    """After warm_traces(max_batch, k) — non-pow2 max_batch included — live
+    queries at any batch size <= max_batch add NO new scan traces (the
+    compile-in-timed-window failure mode of p99 sweeps)."""
+    data, queries, _ = corpus
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                      engine="scan", alpha=0.15)
+    idx = LannsIndex(cfg).build(data)
+    idx.warm_traces(12, 10)  # non-pow2: must still warm the 16 bucket
+    _, _, stats0 = idx.query(queries[:1], 10, return_stats=True)
+    for b in (1, 3, 7, 12):
+        idx.query(queries[:b], 10)
+    _, _, stats1 = idx.query(queries[:1], 10, return_stats=True)
+    assert stats1["scan_traces"] == stats0["scan_traces"]
+
+
 def test_partition_sizes_balanced(corpus):
     data, _, _ = corpus
     cfg = LannsConfig(num_shards=2, num_segments=4, segmenter="rh", engine="scan")
