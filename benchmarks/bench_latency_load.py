@@ -6,8 +6,10 @@ forming — the achieved QPS is node capacity), then sweep an OPEN-loop Poisson
 arrival process at fractions of that capacity (one point past it, where
 queueing delay dominates — the upturn of the paper's p99 curve).  Every point
 runs through ``AsyncAnnFrontend`` + ``serve/loadgen.py``, so latencies are
-end-to-end (submit -> results visible) and include batching delay; a fixed-
-rate point at half load separates queueing from arrival burstiness.
+end-to-end (submit -> results visible) and include batching delay; fixed-
+rate and bursty (two-state on/off MMPP) points at the same half load
+bracket the Poisson point from below and above — the burstiness ladder
+isolates the arrival-process share of the tail.
 
 Emits the usual CSV rows plus ``BENCH_latency_load.json`` (schema in
 ``benchmarks/common.py``): per-point QPS, p50/p95/p99, formed-batch
@@ -94,6 +96,16 @@ def run(
         duration_s=duration_s, seed=seed, **kw,
     )
     _emit_point("latency_load", fixed)
+    # bursty comparison point at the SAME half load: two-state on/off MMPP
+    # arrivals — queues build inside bursts, so its p99 sits between the
+    # fixed-rate floor and the past-saturation blow-up and brackets Poisson
+    # from above (burstiness ladder: fixed < poisson < mmpp).
+    mmpp = run_load_point(
+        idx, queries, process="mmpp",
+        rate_qps=max(0.5 * sat.achieved_qps, 1.0),
+        duration_s=duration_s, seed=seed, **kw,
+    )
+    _emit_point("latency_load", mmpp)
 
     # the *_half_load metrics must come from an EXACT 0.5x point (the fixed-
     # rate comparison is pinned there, and baselines gate it): take it from
@@ -112,9 +124,11 @@ def run(
     metrics = {
         "saturation_qps": sat.achieved_qps,
         "qps_poisson_half_load": half.achieved_qps,
+        "qps_mmpp_half_load": mmpp.achieved_qps,
         "p50_ms_half_load": half.p50_ms,
         "p99_ms_half_load": half.p99_ms,
         "p99_ms_fixed_half_load": fixed.p99_ms,
+        "p99_ms_mmpp_half_load": mmpp.p99_ms,
         "mean_batch_saturation": sat.mean_batch,
     }
     payload = bench_payload(
@@ -127,7 +141,8 @@ def run(
             engine=cfg.engine,
         ),
         metrics=metrics,
-        rows=[sat.row()] + [p.row() for p in points] + [fixed.row()],
+        rows=[sat.row()] + [p.row() for p in points] + [fixed.row(),
+                                                        mmpp.row()],
         smoke=smoke,
     )
     write_bench_json(out, payload)

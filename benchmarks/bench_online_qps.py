@@ -12,9 +12,11 @@ Single-node serving sim, three views of the same batched query executor:
   beam_search retraced per routed-subset size: the pre-device-resident
   serving path) vs the default stacked device-resident mode, with a
   bit-identity check (the speedup must cost zero recall);
-* quantized scan before/after — the fp32 scan path vs the two-stage q8 path
-  (int8 candidate scan + exact re-rank) at the same B/k, with relative
-  recall and the resident bytes-per-vector of each corpus.
+* quantized before/after on BOTH engines — the fp32 scan path vs the
+  two-stage q8 path (int8 candidate scan + exact re-rank), and the fp32
+  flat beam vs the quantized HNSW beam (int8-code walk + exact re-rank),
+  each at the same B/k with relative recall and the resident
+  bytes-per-vector of each corpus.
 
 ``--smoke`` shrinks corpus/duration for CI wiring checks.
 """
@@ -29,7 +31,7 @@ import numpy as np
 from benchmarks.common import (
     bench_payload,
     emit,
-    quantized_scan_compare,
+    quantized_compare,
     sift_like_corpus,
     write_bench_json,
 )
@@ -176,10 +178,12 @@ def run(n=16_000, d=64, topk=100, duration_s=3.0, n_hnsw=12_000,
     metrics.update(run_offline(idx, queries, topk, duration_s))
     metrics.update(run_frontend(idx, queries, topk, duration_s))
     metrics.update(run_hnsw_compare(corpus[:n_hnsw], queries, topk, duration_s))
-    # quantized leg: fp32 scan vs two-stage q8 (shared harness with
-    # bench_recall --quantized — one protocol, one memory accounting)
-    qstats = quantized_scan_compare(
-        corpus, queries, topk, 1024, prefix="online_qps",
+    # quantized legs: fp32 vs q8 on BOTH engines (shared harness with
+    # bench_recall --quantized — one protocol, one memory accounting).
+    # scan = two-stage int8 scan; hnsw = quantized beam + exact re-rank,
+    # reported alongside the fp32 beam QPS above.
+    qstats = quantized_compare(
+        corpus, queries, topk, 1024, prefix="online_qps", engine="scan",
         duration_s=2 * duration_s,
     )
     metrics.update(
@@ -187,6 +191,16 @@ def run(n=16_000, d=64, topk=100, duration_s=3.0, n_hnsw=12_000,
         qps_scan_q8=qstats["qps_q8"],
         q8_rel_recall=qstats["rel_recall"],
         q8_bytes_per_vec=qstats["bytes_per_vec_q8"],
+    )
+    hstats = quantized_compare(
+        corpus[:n_hnsw], queries, topk, 1024, prefix="online_qps",
+        engine="hnsw", duration_s=duration_s,
+    )
+    metrics.update(
+        qps_hnsw_fp32=hstats["qps_fp32"],
+        qps_hnsw_q8=hstats["qps_q8"],
+        q8_hnsw_rel_recall=hstats["rel_recall"],
+        q8_hnsw_bytes_per_vec=hstats["bytes_per_vec_q8"],
     )
     payload = bench_payload(
         "online_qps",

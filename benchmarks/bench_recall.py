@@ -18,7 +18,7 @@ from benchmarks.common import (
     bench_payload,
     emit,
     ground_truth,
-    quantized_scan_compare,
+    quantized_compare,
     sift_like_corpus,
     time_call,
     write_bench_json,
@@ -90,34 +90,42 @@ def run(n=20_000, d=64, n_queries=300, topk=100, engine="scan",
 
 
 def run_quantized(n=20_000, d=64, batch=1024, topk=100, smoke=False,
-                  out="BENCH_recall.json"):
-    """q8 two-stage vs fp32 scan: QPS, recall, resident bytes-per-vector.
+                  engine="scan", out="BENCH_recall.json"):
+    """q8 vs fp32 on one engine: QPS, recall, resident bytes-per-vector.
 
     The acceptance protocol rides the shared harness in benchmarks/common.py
-    (same one the bench_online_qps quantized leg uses); this entry point
-    adds the ground-truth recall columns.
+    (same one the bench_online_qps quantized legs use); this entry point
+    adds the ground-truth recall columns.  ``engine='hnsw'`` benches the
+    quantized beam (+ exact re-rank) against the fp32 flat beam — the
+    ISSUE-5 acceptance bound is recall@100 within 0.01 of fp32 (smaller n:
+    the per-partition HNSW builds are the sequential numpy loop).
     """
+    if engine == "hnsw" and n > 12_000:
+        n = 12_000
     if smoke:
-        n, batch, topk = 3000, 256, 20
+        n, batch, topk = (2000, 256, 20) if engine == "hnsw" \
+            else (3000, 256, 20)
     corpus, queries = sift_like_corpus(n, d, max(batch, 1024), seed=31)
     td, ti = ground_truth(corpus, queries, topk)
-    stats = quantized_scan_compare(
-        corpus, queries, topk, batch, prefix="quantized"
+    stats = quantized_compare(
+        corpus, queries, topk, batch, prefix="quantized", engine=engine
     )
     r_fp = recall_at_k(stats["ids_fp32"], ti[: len(stats["ids_fp32"])], topk)
     r_q8 = recall_at_k(stats["ids_q8"], ti[: len(stats["ids_q8"])], topk)
     emit(
-        f"quantized.truth_recall_b{batch}",
+        f"quantized.truth_recall_{engine}_b{batch}",
         0.0,
         f"R@{topk}_fp32={r_fp:.4f};R@{topk}_q8={r_q8:.4f}",
     )
     stats.update(recall_fp32=r_fp, recall_q8=r_q8)
+    bench = "recall" if engine == "scan" else "recall_q8_hnsw"
     payload = bench_payload(
-        "recall",
-        config=dict(n=n, d=d, batch=batch, topk=topk, mode="quantized"),
+        bench,
+        config=dict(n=n, d=d, batch=batch, topk=topk, mode="quantized",
+                    engine=engine),
         metrics={
-            "qps_scan_fp32": stats["qps_fp32"],
-            "qps_scan_q8": stats["qps_q8"],
+            f"qps_{engine}_fp32": stats["qps_fp32"],
+            f"qps_{engine}_q8": stats["qps_q8"],
             "q8_rel_recall": stats["rel_recall"],
             "recall_fp32": r_fp,
             "recall_q8": r_q8,
@@ -132,15 +140,26 @@ def run_quantized(n=20_000, d=64, batch=1024, topk=100, smoke=False,
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quantized", action="store_true",
-                    help="two-stage q8 vs fp32 scan acceptance protocol")
+                    help="q8 vs fp32 acceptance protocol (see --engine)")
+    ap.add_argument("--engine", default="scan", choices=("scan", "hnsw"),
+                    help="engine for the --quantized protocol: 'scan' "
+                         "(two-stage int8 scan) or 'hnsw' (quantized beam "
+                         "+ exact re-rank)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny corpus (CI wiring check)")
     ap.add_argument("--out", default=None,
-                    help="output JSON path (default: BENCH_recall.json for "
-                         "--quantized, BENCH_recall_table1.json otherwise — "
-                         "distinct so the legs never clobber each other)")
+                    help="output JSON path (defaults: BENCH_recall.json for "
+                         "--quantized, BENCH_recall_q8_hnsw.json for "
+                         "--quantized --engine hnsw, BENCH_recall_table1."
+                         "json otherwise — distinct so the legs never "
+                         "clobber each other)")
     args = ap.parse_args()
     if args.quantized:
-        run_quantized(smoke=args.smoke, out=args.out or "BENCH_recall.json")
+        default_out = (
+            "BENCH_recall.json" if args.engine == "scan"
+            else "BENCH_recall_q8_hnsw.json"
+        )
+        run_quantized(smoke=args.smoke, engine=args.engine,
+                      out=args.out or default_out)
     else:
         run(out=args.out or "BENCH_recall_table1.json")

@@ -93,26 +93,34 @@ def time_call(fn, *args, repeats=3, **kw):
     return float(np.median(ts)), out
 
 
-def quantized_scan_compare(
+def quantized_compare(
     corpus,
     queries,
     topk: int,
     batch: int,
     *,
     prefix: str,
+    engine: str = "scan",
     reps: int = 9,
     duration_s: float | None = None,
 ):
-    """fp32 scan vs two-stage q8 scan: interleaved QPS, recall, memory.
+    """fp32 vs q8 on one engine: interleaved QPS, recall, memory.
 
-    The shared harness behind ``bench_recall --quantized`` and the
-    ``bench_online_qps`` quantized leg (one protocol, one bytes-per-vector
-    accounting).  Builds both indexes from the same base config, ALTERNATES
-    between the contenders every rep so machine noise hits them equally
-    (the emitted speedup is the acceptance metric), and reports recall of
-    q8 both against ground truth (caller's job) and RELATIVE to the fp32
-    results, plus the resident scan bytes-per-vector — the ~4x memory win
-    that lets 4x more segments fit device-resident.
+    The shared harness behind ``bench_recall --quantized`` (both engines)
+    and the ``bench_online_qps`` quantized legs (one protocol, one
+    bytes-per-vector accounting).  Builds both indexes from the same base
+    config, ALTERNATES between the contenders every rep so machine noise
+    hits them equally (the emitted speedup is the acceptance metric), and
+    reports recall of q8 both against ground truth (caller's job) and
+    RELATIVE to the fp32 results, plus the resident bytes-per-vector of the
+    candidate-generation corpus — the ~4x memory win that lets 4x more
+    segments fit device-resident.
+
+    ``engine='scan'`` compares the fused fp32 scan against the two-stage
+    int8 scan; ``engine='hnsw'`` compares the fp32 flat beam against the
+    quantized beam + exact re-rank (the resident accounting then covers the
+    per-node vector payload of the stacked graph — the adjacency arrays are
+    identical on both sides).
 
     Runs ``reps`` alternating batches, or as many as fit in ``duration_s``
     seconds when given.  QPS uses the MINIMUM latency over reps (timeit's
@@ -124,7 +132,10 @@ def quantized_scan_compare(
     from repro.core import LannsConfig, LannsIndex, recall_at_k
 
     base = dict(num_shards=1, num_segments=8, segmenter="apd",
-                engine="scan", alpha=0.15)
+                engine=engine, alpha=0.15)
+    if engine == "hnsw":
+        base.update(hnsw_m=12, ef_construction=80,
+                    ef_search=max(topk, 100))
     idx_fp = LannsIndex(LannsConfig(**base)).build(corpus)
     idx_q8 = LannsIndex(LannsConfig(**base, quantized="q8")).build(corpus)
     n_pool = len(queries)
@@ -149,28 +160,45 @@ def quantized_scan_compare(
         rep += 1
     med = {name: float(np.min(ts)) for name, ts in lat.items()}
     qps = {name: batch / m for name, m in med.items()}
-    ex8 = idx_q8._q8_executor()
     n_total = sum(p.size for p in idx_q8.partitions.values())
-    bpv_q8 = ex8.resident_bytes() / max(n_total, 1)
-    bpv_fp = 4.0 * corpus.shape[1]
+    if engine == "scan":
+        ex8 = idx_q8._q8_executor()
+        res_q8 = ex8.resident_bytes()
+        exact_mb = ex8.exact_store_bytes() / 2**20
+        bpv_fp = 4.0 * corpus.shape[1]
+    else:
+        stack = idx_q8._hnsw_stack(quantized=True)
+        # UNPADDED per-partition codes (the stack's shared pow2 buckets add
+        # up to 2x padding rows, which would overstate bytes-per-vector —
+        # both sides of the comparison count actual rows, like the scan
+        # branch)
+        res_q8 = sum(
+            int(p.q8.codes.nbytes) + int(p.q8.norms2.nbytes)
+            + int(p.q8.scales.nbytes)
+            for p in idx_q8.partitions.values() if p.q8 is not None
+        )
+        exact_mb = sum(s.nbytes() for s in stack["stores"]) / 2**20
+        # fp32 comparison point: the same rows at fp32 width
+        bpv_fp = 4.0 * stack["arrs"]["vectors"].shape[1]
+    bpv_q8 = res_q8 / max(n_total, 1)
     emit(
-        f"{prefix}.fp32_scan_b{batch}",
+        f"{prefix}.fp32_{engine}_b{batch}",
         1e6 * med["fp32"] / batch,
         f"qps={qps['fp32']:.0f}",
     )
     emit(
-        f"{prefix}.q8_scan_b{batch}",
+        f"{prefix}.q8_{engine}_b{batch}",
         1e6 * med["q8"] / batch,
         f"qps={qps['q8']:.0f};rel_recall@{topk}={rel:.4f};"
         f"speedup={qps['q8'] / qps['fp32']:.2f}x",
     )
     emit(
-        f"{prefix}.q8_memory",
+        f"{prefix}.q8_{engine}_memory",
         0.0,
         f"bytes_per_vec_q8={bpv_q8:.1f};bytes_per_vec_fp32={bpv_fp:.0f};"
         f"shrink={bpv_fp / bpv_q8:.2f}x;"
-        f"resident_q8_mb={ex8.resident_bytes() / 2**20:.1f};"
-        f"exact_store_mb={ex8.exact_store_bytes() / 2**20:.1f}",
+        f"resident_q8_mb={res_q8 / 2**20:.1f};"
+        f"exact_store_mb={exact_mb:.1f}",
     )
     return {
         "qps_fp32": qps["fp32"], "qps_q8": qps["q8"], "rel_recall": rel,

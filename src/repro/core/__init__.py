@@ -8,6 +8,12 @@ perShardTopK-trimmed two-level merging, and exact brute-force ground truth.
 from repro.core.brute_force import brute_force_topk
 from repro.core.hnsw import HNSWConfig, HNSWIndex, FrozenHNSW
 from repro.core.lanns import LannsConfig, LannsIndex
+from repro.core.plan import (
+    QueryPlan,
+    QueryPlanExecutor,
+    choose_merge_path,
+    knob_groups,
+)
 from repro.core.merge import (
     merge_topk,
     merge_topk_disjoint_np,
@@ -34,6 +40,10 @@ __all__ = [
     "FrozenHNSW",
     "LannsConfig",
     "LannsIndex",
+    "QueryPlan",
+    "QueryPlanExecutor",
+    "choose_merge_path",
+    "knob_groups",
     "SegmenterConfig",
     "RandomSegmenter",
     "TreeSegmenter",

@@ -499,6 +499,38 @@ def _distance_rows(metric, q, x):
     return -(x @ q)
 
 
+def _make_row_dist(arrs, metric):
+    """Per-lane distance closure: (q, rows) -> (m,) scores, lower is better.
+
+    fp32 mode (no ``norms2`` leaf in ``arrs``): gather fp32 rows, exact
+    ``_distance_rows`` — the pre-existing path, op-for-op.
+
+    Quantized mode (``arrs['norms2']`` present): ``vectors`` holds int8
+    CODES and the caller pre-folds the partition's per-dim scales into each
+    lane's query (``q_lane = q * scales[partition]``), so one fp32 cast-gemm
+    per gather gives ``<q, x_hat>`` — the dot against the dequantized row —
+    with no per-row scale gather.  'l2' scores are then
+    ``||x_hat||^2 - 2<q, x_hat>``: the true squared distance to the
+    dequantized point MINUS the per-query ||q||^2 constant, which cannot
+    change any within-lane ordering (the beam only ever compares distances
+    of one lane); the exact re-rank stage replaces these scores anyway.
+    Presence of the extra pytree leaf changes the jit cache key, so fp32
+    traces are never polluted.
+    """
+    vectors = arrs["vectors"]
+    norms2 = arrs.get("norms2")
+    if norms2 is None:
+        return lambda q, rows: _distance_rows(metric, q, vectors[rows])
+
+    def dist(q, rows):
+        dots = vectors[rows].astype(jnp.float32) @ q
+        if metric == "l2":
+            return norms2[rows] - 2.0 * dots
+        return -dots
+
+    return dist
+
+
 def _beam_search_lanes(arrs, queries, entry_rows, offsets, valid, *,
                        k, ef, max_iters, metric):
     """The beam-search core, in flat row space.
@@ -518,18 +550,21 @@ def _beam_search_lanes(arrs, queries, entry_rows, offsets, valid, *,
     shifted by the lane's ``off``.  A single partition is the off == 0
     special case.  An invalid lane (padding) seeds the walk with a -inf
     entry distance and an empty beam, so both loops exit immediately.
+
+    ``arrs`` may carry a quantized corpus (int8 codes + ``norms2``; see
+    ``_make_row_dist``) — the walk itself is precision-agnostic.
     """
-    vectors = arrs["vectors"]
     adj0 = arrs["adj0"]
     upper_adj = arrs["upper_adj"]
     num_upper_levels = upper_adj.shape[0]
+    row_dist = _make_row_dist(arrs, metric)
 
     def one_lane(q, ep, off, v):
         def to_rows(nbrs):
             return jnp.where(nbrs >= 0, nbrs + off, -1)
 
         # ---- upper levels: greedy walk to a local minimum per level
-        ep_d = _distance_rows(metric, q, vectors[jnp.clip(ep, 0)[None]])[0]
+        ep_d = row_dist(q, jnp.clip(ep, 0)[None])[0]
         ep_d = jnp.where(v, ep_d, -jnp.inf)
         ep = jnp.where(v, ep, -1)
         for l in range(num_upper_levels - 1, -1, -1):
@@ -539,7 +574,7 @@ def _beam_search_lanes(arrs, queries, entry_rows, offsets, valid, *,
                 ep, ep_d, _ = state
                 nbrs = to_rows(adj[jnp.clip(ep, 0)])
                 valid_n = nbrs >= 0
-                nd = _distance_rows(metric, q, vectors[jnp.clip(nbrs, 0)])
+                nd = row_dist(q, jnp.clip(nbrs, 0))
                 nd = jnp.where(valid_n, nd, jnp.inf)
                 j = jnp.argmin(nd)
                 better = nd[j] < ep_d
@@ -576,7 +611,7 @@ def _beam_search_lanes(arrs, queries, entry_rows, offsets, valid, *,
             # dedup against current beam (m0 x ef comparison matrix)
             dup = jnp.any(nbrs[:, None] == beam_ids[None, :], axis=1)
             valid_n = valid_n & (~dup)
-            nd = _distance_rows(metric, q, vectors[jnp.clip(nbrs, 0)])
+            nd = row_dist(q, jnp.clip(nbrs, 0))
             nd = jnp.where(valid_n, nd, jnp.inf)
             # merge (ef + m0) candidates, keep best ef
             all_ids = jnp.concatenate([beam_ids, jnp.where(valid_n, nbrs, -1)])
@@ -640,6 +675,11 @@ def beam_search_flat(arrs, queries, entry_rows, offsets, valid, *,
     ~2x lanes, and under vmap every padded lane runs the full loop.  Returns
     (dists (T, k), rows (T, k)) with rows in global (flat) space; map them
     through a flat key table host-side.
+
+    Quantized corpora: pass int8 codes as ``vectors`` plus a ``norms2``
+    leaf and pre-fold each lane's per-partition scales into its query row
+    (``_make_row_dist``); the extra leaf keys a separate jit trace, so the
+    fp32 path is untouched.
     """
     return _beam_search_lanes(
         arrs, queries, entry_rows, offsets, valid,

@@ -34,15 +34,16 @@ import numpy as np
 
 from repro.common.utils import (
     Timer,
-    jit_cache_size,
     next_pow2,
     next_pow2_quarter,
 )
 from repro.core.hnsw import HNSWConfig, HNSWIndex
-from repro.core.merge import (
-    merge_topk_disjoint_np,
-    merge_topk_vec,
-    per_shard_topk,
+from repro.core.merge import per_shard_topk
+from repro.core.plan import (
+    QueryPlanExecutor,
+    choose_merge_path,
+    knob_groups,
+    query_stats,
 )
 from repro.core.segmenter import SegmenterConfig
 from repro.core.sharding import TwoLevelPartitioner
@@ -60,10 +61,12 @@ class LannsConfig:
     (raw-IP routing loses the norm component entirely).  Returned distances
     are converted back to inner products (negated, lower-is-better).
 
-    quantized: 'none' | 'q8' — 'q8' serves scan partitions through the
-    two-stage path (int8 candidate scan + exact fp32 re-rank of
-    ``rerank_factor * perShardTopK`` candidates per routed lane), cutting
-    the resident scan corpus ~4x with near-identical recall.
+    quantized: 'none' | 'q8' — 'q8' serves partitions from int8 codes with
+    an exact fp32 re-rank, cutting the resident corpus ~4x with
+    near-identical recall.  Composes with BOTH engines: 'scan' runs the
+    two-stage int8 scan (candidates = ``rerank_factor * perShardTopK`` per
+    routed lane), 'hnsw' runs the quantized beam (graph walk over int8
+    codes, then the same shared exact re-rank stage).
     rerank_store: where the exact fp32 originals live for stage 2 —
     'host' (numpy / mmap-friendly), 'device', or 'auto' (host on CPU,
     device on TPU).
@@ -176,21 +179,33 @@ class _Partition:
                 entry=int(payload["entry"]),
                 keys=payload.get("keys"),
             )
-        elif config.quantized == "q8" and self.size > 0:
-            from repro.quant.codec import Q8Corpus, quantize_q8
-
-            q8_metric = "l2" if config.metric == "mips" else config.metric
-            if payload.get("q8_codes") is not None:
-                self.q8 = Q8Corpus(
-                    codes=payload["q8_codes"],
-                    scales=payload["q8_scales"],
-                    norms2=payload["q8_norms2"],
-                    metric=q8_metric,
+            if config.quantized == "q8" and self.size > 0:
+                # quantized beam codes: frozen vectors are already
+                # metric-prepped (cos rows normalized at build, mips rows
+                # augmented), so encode as-is — 'ip' for cos avoids a
+                # second normalization pass inside the codec.
+                hm = config.hnsw_config().metric
+                self.q8 = self._q8_from_payload(
+                    payload, self.frozen.vectors, "l2" if hm == "l2" else "ip"
                 )
-            else:
-                # legacy fp32 artifact (or fresh build): quantization is
-                # deterministic, so encoding here == encoding at save time.
-                self.q8 = quantize_q8(self.vectors, q8_metric)
+        elif config.quantized == "q8" and self.size > 0:
+            q8_metric = "l2" if config.metric == "mips" else config.metric
+            self.q8 = self._q8_from_payload(payload, self.vectors, q8_metric)
+
+    @staticmethod
+    def _q8_from_payload(payload, vectors, q8_metric):
+        from repro.quant.codec import Q8Corpus, quantize_q8
+
+        if payload.get("q8_codes") is not None:
+            return Q8Corpus(
+                codes=payload["q8_codes"],
+                scales=payload["q8_scales"],
+                norms2=payload["q8_norms2"],
+                metric=q8_metric,
+            )
+        # legacy fp32 artifact (or fresh build): quantization is
+        # deterministic, so encoding here == encoding at save time.
+        return quantize_q8(vectors, q8_metric)
 
     @property
     def size(self):
@@ -277,11 +292,6 @@ class LannsIndex:
             raise ValueError(
                 f"quantized={config.quantized!r} — expected 'none' or 'q8'"
             )
-        if config.quantized == "q8" and config.engine != "scan":
-            raise ValueError(
-                "quantized='q8' requires engine='scan' (quantized HNSW "
-                "beams are a ROADMAP follow-on)"
-            )
         if config.rerank_store not in ("auto", "host", "device"):
             raise ValueError(
                 f"rerank_store={config.rerank_store!r} — expected 'auto', "
@@ -293,13 +303,15 @@ class LannsIndex:
         )
         self.partitions: dict[tuple, _Partition] = {}
         self.build_stats: dict = {}
-        self._stack = None  # lazily-built stacked HNSW device pytree
+        # lazily-built stacked HNSW device pytrees, keyed by quantized flag
+        self._stack: dict[bool, Optional[dict]] = {}
         self._q8_exec = None  # lazily-built two-stage quantized executor
+        self._exec = QueryPlanExecutor(self)  # the staged query executor
 
     # -- stacked HNSW serving state -------------------------------------------
 
     def _invalidate_stack(self):
-        self._stack = None
+        self._stack = {}
         self._q8_exec = None
 
     def _q8_executor(self):
@@ -339,7 +351,7 @@ class LannsIndex:
             if p.kind == "hnsw" and p.size > 0
         )
 
-    def _hnsw_stack(self):
+    def _hnsw_stack(self, quantized: bool = False):
         """Flat device pytree over every non-empty HNSW partition.
 
         Partition rows concatenate into shared flat arrays — vectors
@@ -348,47 +360,81 @@ class LannsIndex:
         ``beam_search_flat`` trace then serves any mix of (partition, query)
         lanes.  Built host-side and uploaded ONCE, then cached for the life
         of the partitions.  Returns {} when the index has no HNSW partitions.
+
+        ``quantized=True`` builds the int8-code variant for the q8 beam:
+        ``vectors`` holds the codes (a quarter of the fp32 bytes resident
+        on device), an extra ``norms2`` leaf carries the dequantized
+        squared norms, and host-side per-partition ``scales`` (P, d) +
+        ``stores`` (the shared exact-rerank stores) ride along.  The two
+        variants cache independently — a q8 index never uploads fp32
+        vectors at all.
         """
-        if self._stack is not None:
-            return self._stack
+        key = bool(quantized)
+        if self._stack.get(key) is not None:
+            return self._stack[key]
         items = self._hnsw_parts()
-        if not items:
-            self._stack = {}
-            return self._stack
+        if not items or (quantized and items[0][1].q8 is None):
+            self._stack[key] = {}
+            return self._stack[key]
         P = len(items)
         n_pad, l_pad = self._hnsw_pads(items)
         dim = items[0][1].frozen.vectors.shape[1]
         m0 = items[0][1].frozen.adj0.shape[1]
         M = items[0][1].frozen.upper_adj.shape[2]
-        vecs = np.zeros((P * n_pad, dim), np.float32)
         adj0 = np.full((P * n_pad, m0), -1, np.int32)
         upper = np.full((l_pad, P * n_pad, M), -1, np.int32)
         entry = np.zeros((P,), np.int32)
         keys = np.full((P * n_pad,), -1, np.int64)
+        if quantized:
+            vecs = np.zeros((P * n_pad, dim), np.int8)
+            norms2 = np.zeros((P * n_pad,), np.float32)
+            scales = np.ones((P, dim), np.float32)
+        else:
+            vecs = np.zeros((P * n_pad, dim), np.float32)
         for pi, (_, p) in enumerate(items):
             fr = p.frozen
             n = fr.size
             off = pi * n_pad
-            vecs[off: off + n] = fr.vectors
+            if quantized:
+                vecs[off: off + n] = p.q8.codes
+                norms2[off: off + n] = p.q8.norms2
+                scales[pi] = p.q8.scales
+            else:
+                vecs[off: off + n] = fr.vectors
             adj0[off: off + n] = fr.adj0
             upper[: fr.num_upper_levels, off: off + n] = fr.upper_adj
             entry[pi] = fr.entry
             keys[off: off + n] = (
                 fr.keys if fr.keys is not None else np.arange(n, dtype=np.int64)
             )
-        self._stack = {
-            "arrs": {
-                "vectors": jnp.asarray(vecs),
-                "adj0": jnp.asarray(adj0),
-                "upper_adj": jnp.asarray(upper),
-            },
+        arrs = {
+            "vectors": jnp.asarray(vecs),
+            "adj0": jnp.asarray(adj0),
+            "upper_adj": jnp.asarray(upper),
+        }
+        stack = {
+            "arrs": arrs,
             "entry": entry,  # per-partition local entry node (host)
             "keys": keys,
             "index": {sg: pi for pi, (sg, _) in enumerate(items)},
             "n_pad": n_pad,
             "l_pad": l_pad,
         }
-        return self._stack
+        if quantized:
+            from repro.quant.rerank import ExactStore, resolve_store_mode
+
+            # the extra pytree leaf keys the quantized beam's own jit trace
+            arrs["norms2"] = jnp.asarray(norms2)
+            stack["scales"] = scales
+            stack["stores"] = [
+                ExactStore(p.frozen.vectors, p.frozen.keys)
+                for _, p in items
+            ]
+            stack["store_mode"] = resolve_store_mode(
+                self.config.rerank_store
+            )
+        self._stack[key] = stack
+        return stack
 
     def _hnsw_pads(self, items=None):
         """Shared (n_pad, l_pad) corpus buckets over the servable partitions."""
@@ -481,6 +527,7 @@ class LannsIndex:
         topk: int,
         *,
         ef: Optional[int] = None,
+        knobs=None,
     ) -> "LannsIndex":
         """Pre-compile the serving trace set for batches up to ``max_batch``.
 
@@ -493,6 +540,14 @@ class LannsIndex:
         the stacked-HNSW / q8 paths, and for fp32 scan partitions a direct
         per-partition sweep covers every (pow2 subset, corpus bucket) combo
         regardless of how routing happens to split the batch.
+
+        Per-request knobs: ``topk`` (and for HNSW ``ef``) are STATIC jit
+        args, so every distinct knob pair a mixed workload serves has its
+        own trace set — pass the workload's mix as ``knobs`` (an iterable
+        of ``(topk, ef)`` pairs; None entries mean the defaults above) and
+        each pair's grid is warmed too.  Without this, the first batch
+        containing an unseen knob group compiles mid-window — the exact
+        first-traffic poisoning this method exists to prevent.
 
         Coverage caveat: the per-partition sweep is exhaustive only for the
         fp32 scan engine.  q8 and HNSW indexes get best-effort whole-batch
@@ -513,44 +568,63 @@ class LannsIndex:
         # would leave the TOP bucket cold for non-pow2 max_batch.
         b_top = next_pow2(max_batch)
         dummy = rng.standard_normal((b_top, qdim)).astype(np.float32)
-        b = 1
-        while b <= b_top:
-            self.query(dummy[:b], topk, ef=ef)
-            b *= 2
+        pairs = [(topk, ef)]
+        for tk_k, ef_k in knobs or ():
+            pair = (topk if tk_k is None else int(tk_k),
+                    ef if ef_k is None else int(ef_k))
+            if pair not in pairs:
+                pairs.append(pair)
+        for tk_w, ef_w in pairs:
+            b = 1
+            while b <= b_top:
+                self.query(dummy[:b], tk_w, ef=ef_w)
+                b *= 2
         if cfg.engine == "scan" and cfg.quantized == "none":
-            pstk = per_shard_topk(topk, cfg.num_shards, cfg.topk_confidence)
             full = dummy
             if cfg.metric == "mips":
                 full = np.concatenate(
                     [dummy, np.zeros((len(dummy), 1), np.float32)], axis=1
                 )
-            for p in parts:
-                b = 1
-                while b <= b_top:
-                    p.search(full[:b], pstk, ef=ef)
-                    b *= 2
+            for tk_w, ef_w in pairs:
+                pstk = per_shard_topk(
+                    tk_w, cfg.num_shards, cfg.topk_confidence
+                )
+                for p in parts:
+                    b = 1
+                    while b <= b_top:
+                        p.search(full[:b], pstk, ef=ef_w)
+                        b *= 2
         return self
 
     def query(
         self,
         queries: np.ndarray,
-        topk: int,
+        topk,
         *,
-        ef: Optional[int] = None,
+        ef=None,
         return_stats: bool = False,
         hnsw_mode: str = "stacked",  # 'stacked' | 'partition' | 'legacy'
     ):
         """Two-level partitioned search with perShardTopK (paper §5.3).
 
         Every query goes to every shard; within a shard it goes only to the
-        segments its virtual-spill routing selects.  Returns (dists, ids)
-        shaped (B, topk); optionally per-query routing stats.
+        segments its virtual-spill routing selects.  Execution is the staged
+        plan pipeline in ``repro.core.plan``: route -> candidates (fp32
+        scan | q8 scan | hnsw beam | q8 hnsw beam) -> exact re-rank for the
+        quantized paths -> merge (dedup-free or two-level, decided in ONE
+        place by ``choose_merge_path``).
 
-        Batched executor: queries are grouped by routed segment, so each
-        (shard, segment) partition runs ONE batched search over exactly its
-        routed queries; candidates land in compact per-route slots (sized by
-        the worst-case route count, not num_segments) and both merge levels
-        run as single vectorized calls over all (query, shard) rows.
+        Per-request knobs: ``topk`` and ``ef`` accept scalars OR per-request
+        arrays of shape (B,) — a formed micro-batch may mix them freely.
+        The executor splits the batch into homogeneous (topk, ef) groups,
+        runs each through the single-knob pipeline (inputs pad to the
+        existing pow2 trace buckets, so no new trace shapes appear) and
+        reassembles — bit-identical to issuing each group as its own query.
+        ``ef`` entries <= 0 mean "index default".  With mixed ``topk`` the
+        outputs are shaped (B, max(topk)); row r carries topk[r] results
+        then (+inf, -1) padding.
+
+        Returns (dists, ids); optionally per-query routing stats.
 
         HNSW partitions additionally run device-resident and trace-stable,
         selected by ``hnsw_mode``:
@@ -570,6 +644,15 @@ class LannsIndex:
                 "or 'legacy'"
             )
         cfg = self.config
+        if (
+            cfg.quantized == "q8"
+            and cfg.engine == "hnsw"
+            and hnsw_mode != "stacked"
+        ):
+            raise ValueError(
+                "quantized='q8' with engine='hnsw' serves only "
+                "hnsw_mode='stacked' (the flat quantized beam)"
+            )
         queries = np.asarray(queries, dtype=np.float32)
         if cfg.metric == "mips":
             if not hasattr(self, "_mips_M2"):
@@ -581,238 +664,84 @@ class LannsIndex:
                 [queries, np.zeros((queries.shape[0], 1), np.float32)], axis=1
             )
         B = queries.shape[0]
-        S = cfg.num_shards
-        pstk = per_shard_topk(topk, S, cfg.topk_confidence)
-        if B == 0:
+        if cfg.engine != "hnsw":
+            # ef is an HNSW beam knob — the scan engine ignores it, so
+            # normalizing it away BEFORE grouping keeps a formed micro-batch
+            # whole instead of fragmenting it into bit-identical groups.
+            ef = None
+        scalar, groups = knob_groups(topk, ef, B)
+        if scalar:
+            tk, efv, _ = groups[0]
+            return self._query_group(
+                queries, tk, efv, return_stats, hnsw_mode
+            )
+        # mixed knobs: one homogeneous sub-query per group, rows reassembled
+        # in place.  Output width is the widest topk; narrower rows carry
+        # (+inf, -1) padding past their own topk.
+        k_max = max((tk for tk, _, _ in groups), default=0)
+        out_d = np.full((B, k_max), np.inf, np.float32)
+        out_i = np.full((B, k_max), -1, np.int64)
+        group_stats = []
+        for tk, efv, rows in groups:
+            res = self._query_group(
+                queries[rows], tk, efv, return_stats, hnsw_mode
+            )
+            if return_stats:
+                d, i, st = res
+                group_stats.append((tk, len(rows), st))
+            else:
+                d, i = res
+            out_d[rows, :tk] = d
+            out_i[rows, :tk] = i
+        if not return_stats:
+            return out_d, out_i
+        return out_d, out_i, self._combine_group_stats(group_stats, B)
+
+    def _query_group(self, queries, topk, ef, return_stats, hnsw_mode):
+        """One homogeneous (topk, ef) group through the staged executor."""
+        cfg = self.config
+        pstk = per_shard_topk(topk, cfg.num_shards, cfg.topk_confidence)
+        if queries.shape[0] == 0:
             # well-formed empty outputs; routing/merge would otherwise choke
             # on zero-length reductions (segments_visited.max()).
             out_d = np.full((0, topk), np.inf, np.float32)
             out_i = np.full((0, topk), -1, np.int64)
             if return_stats:
-                merge_path = (
-                    "disjoint"
-                    if cfg.engine == "scan" and cfg.spill == "virtual"
-                    else "two_level"
-                )
-                return out_d, out_i, self._query_stats(
-                    pstk, np.zeros((0,), np.int64), merge_path
+                return out_d, out_i, query_stats(
+                    pstk, np.zeros((0,), np.int64), choose_merge_path(cfg)
                 )
             return out_d, out_i
-        seg_mask = self.partitioner.route_queries(queries)  # (B, m)
-        segments_visited = seg_mask.sum(axis=1)
-        # slot[b, g]: position of segment g among query b's routed segments.
-        slot = np.cumsum(seg_mask, axis=1) - 1
-        max_routes = max(int(segments_visited.max()), 1)
-        # virtual spill stores each point in exactly ONE (shard, segment), so
-        # scan-engine candidate ids are disjoint across lanes and the final
-        # merge needs no dedup — one partial sort over every candidate
-        # (merge_topk_disjoint_np) instead of the two-level lexsort merge.
-        # fp32 scan joined the q8 two-stage path here after its deprecation
-        # window (ROADMAP item; parity-tested in tests/test_lanns.py);
-        # physical spill (duplicate ids) and the HNSW engine keep
-        # merge_topk_vec.  q8 lanes additionally stay candidate-wide
-        # (rerank_factor * pstk exactly-scored rows each).
-        scan_virtual = cfg.engine == "scan" and cfg.spill == "virtual"
-        q8_fast = cfg.quantized == "q8" and scan_virtual
-        lane_w = pstk
-        if q8_fast:
-            lane_w = min(
-                cfg.rerank_factor * pstk,
-                max((p.size for p in self.partitions.values()), default=pstk),
-            )
-            lane_w = max(lane_w, pstk)
-        cand_d = np.full((B, S, max_routes, lane_w), np.inf, np.float32)
-        cand_i = np.full((B, S, max_routes, lane_w), -1, np.int64)
-        # routed query subset per segment — shared by every shard's (s, g)
-        # partition, so compute it once.
-        sels = [np.nonzero(seg_mask[:, g])[0] for g in range(cfg.num_segments)]
-        handled = self._query_hnsw_stacked(
-            queries, sels, slot, cand_d, cand_i, pstk, ef
-        ) if hnsw_mode == "stacked" else set()
-        if cfg.quantized == "q8":
-            handled |= self._q8_executor().run(
-                queries, sels, slot, cand_d, cand_i, pstk,
-                lane_width=lane_w,
-            )
-        n_pad = l_pad = None
-        if hnsw_mode == "partition":
-            n_pad, l_pad = self._hnsw_pads()
-        for g in range(cfg.num_segments):
-            sel = sels[g]
-            if sel.size == 0:
-                continue
-            q_sel = queries[sel]
-            sl = slot[sel, g]
-            for s in range(S):
-                if (s, g) in handled:
-                    continue
-                part = self.partitions.get((s, g))
-                if part is None or part.size == 0:
-                    continue
-                # the paper propagates the SHARD-level perShardTopK to the
-                # segments (never a per-segment trim) — §5.3.2.
-                d, i = part.search(
-                    q_sel, pstk, ef=ef, n_pad=n_pad, l_pad=l_pad,
-                    legacy=(hnsw_mode == "legacy"),
-                )
-                cand_d[sel, s, sl, :pstk] = d
-                cand_i[sel, s, sl, :pstk] = i
-        use_disjoint = scan_virtual and (
-            not q8_fast
-            or handled >= {
-                sg for sg, p in self.partitions.items() if p.size > 0
-            }
-        )
-        if use_disjoint:
-            # dedup-free merge over every candidate (a superset of what
-            # perShardTopK trimming would forward, so recall can only
-            # improve); physical spill (duplicate ids) takes the
-            # merge_topk_vec branch below instead.
-            out_d, out_i = merge_topk_disjoint_np(
-                cand_d.reshape(B, S * max_routes * lane_w),
-                cand_i.reshape(B, S * max_routes * lane_w),
-                topk,
-            )
-        else:
-            # level-1: segment merge inside each shard, all (query, shard)
-            # rows in one vectorized call.
-            shard_d, shard_i = merge_topk_vec(
-                cand_d.reshape(B * S, max_routes * lane_w),
-                cand_i.reshape(B * S, max_routes * lane_w),
-                pstk,
-            )
-            # level-2: broker merge over shards.
-            out_d, out_i = merge_topk_vec(
-                shard_d.reshape(B, S * pstk), shard_i.reshape(B, S * pstk),
-                topk,
-            )
-        if cfg.quantized == "q8" and cfg.metric in ("l2", "mips"):
-            # the q8 executor's lane distances omit the per-query ||q||^2
-            # constant (it cannot change any within-query ordering); restore
-            # true squared distances with one (B, topk) add.
-            qn8 = np.einsum("bd,bd->b", queries, queries)
-            out_d = np.where(
-                np.isfinite(out_d), out_d + qn8[:, None], out_d
-            )
-        if cfg.metric == "mips":
-            # convert augmented-L2 distances back to (negated) inner products:
-            # d^2 = M^2 + |q|^2 - 2<q, x>  =>  -<q, x> = (d^2 - M^2 - |q|^2)/2
-            qn = np.einsum("bd,bd->b", queries[:, :-1], queries[:, :-1])
-            out_d = np.where(
-                np.isfinite(out_d),
-                (out_d - self._mips_M2 - qn[:, None]) / 2.0,
-                np.inf,
-            )
+        out_d, out_i, plan = self._exec.execute(queries, topk, ef, hnsw_mode)
         if return_stats:
-            return out_d, out_i, self._query_stats(
-                pstk, segments_visited,
-                "disjoint" if use_disjoint else "two_level",
+            return out_d, out_i, query_stats(
+                pstk, plan.segments_visited, plan.merge_path
             )
         return out_d, out_i
 
-    @staticmethod
-    def _query_stats(pstk, segments_visited, merge_path="two_level"):
-        """Routing/trace stats dict — one schema for empty and non-empty
-        batches (dashboards index these keys unconditionally)."""
-        from repro.core import hnsw as hnsw_mod
-
-        from repro.kernels import ref as ref_mod
-        from repro.quant import twostage as q8_mod
-
-        empty = segments_visited.size == 0
-        return {
-            "per_shard_topk": pstk,
-            # which final-merge implementation served the batch: 'disjoint'
-            # (dedup-free partial sort; scan engine + virtual spill) or
-            # 'two_level' (lexsort dedup merge).
-            "merge_path": merge_path,
-            "mean_segments_visited":
-                0.0 if empty else float(segments_visited.mean()),
-            "max_segments_visited":
-                0 if empty else int(segments_visited.max()),
-            # process-wide trace counts: serving dashboards watch these to
-            # confirm the trace set stays bounded.
-            "beam_traces": jit_cache_size(hnsw_mod.beam_search),
-            "beam_traces_flat": jit_cache_size(hnsw_mod.beam_search_flat),
-            "scan_traces": jit_cache_size(ref_mod.distance_topk_blocked),
-            "scan_traces_q8": jit_cache_size(q8_mod._stage1_scores),
-        }
-
-    def _query_hnsw_stacked(self, queries, sels, slot, cand_d, cand_i, pstk, ef):
-        """One ``beam_search_flat`` call covering every HNSW partition.
-
-        Builds the sparse lane list of (partition, routed query) pairs —
-        partition (s, g) searches the routed subset of segment g (identical
-        across shards) — padded to a quarter-pow2 lane bucket so the call
-        reuses a bounded trace set with <= 25% padding waste even under
-        unbalanced segment routing.  Results scatter into the executor's
-        compact per-route candidate slots.  Returns the set of
-        (shard, segment) partitions served.
-        """
-        stack = self._hnsw_stack()
-        if not stack:
-            return set()
-        from repro.core.hnsw import beam_search_flat
-
-        hcfg = self.config.hnsw_config()
-        q_eff = queries
-        if hcfg.metric == "cos":
-            q_eff = q_eff / np.maximum(
-                np.linalg.norm(q_eff, axis=-1, keepdims=True), 1e-12
+    def _combine_group_stats(self, group_stats, B):
+        """Fold per-group stats into one batch-level dict (same schema)."""
+        if not group_stats:
+            # B == 0 with array knobs: same merge-path report as the scalar
+            # B == 0 path (the decision is configuration, not batch, state)
+            return query_stats(
+                0, np.zeros((0,), np.int64),
+                choose_merge_path(self.config), knob_groups_count=0,
             )
-        n_pad = stack["n_pad"]
-        blocks = []  # (s, g, pi, lane_start, count)
-        q_blocks, off_blocks, ep_blocks = [], [], []
-        T = 0
-        for (s, g), pi in stack["index"].items():
-            sel = sels[g]
-            if len(sel) == 0:
-                continue
-            blocks.append((s, g, pi, T, len(sel)))
-            q_blocks.append(q_eff[sel])
-            off_blocks.append(
-                np.full(len(sel), pi * n_pad, np.int32)
-            )
-            ep_blocks.append(
-                np.full(len(sel), stack["entry"][pi] + pi * n_pad, np.int32)
-            )
-            T += len(sel)
-        handled = {(s, g) for (s, g) in stack["index"]}
-        if T == 0:
-            return handled
-        T_pad = next_pow2_quarter(T)
-        dim = queries.shape[1]
-        Q = np.zeros((T_pad, dim), np.float32)
-        OFF = np.zeros((T_pad,), np.int32)
-        EP = np.zeros((T_pad,), np.int32)
-        Q[:T] = np.concatenate(q_blocks)
-        OFF[:T] = np.concatenate(off_blocks)
-        EP[:T] = np.concatenate(ep_blocks)
-        V = np.arange(T_pad) < T
-        ef_eff = max(ef or hcfg.ef_search, pstk)
-        d_all, i_all = beam_search_flat(
-            stack["arrs"],
-            jnp.asarray(Q),
-            jnp.asarray(EP),
-            jnp.asarray(OFF),
-            jnp.asarray(V),
-            k=pstk,
-            ef=ef_eff,
-            max_iters=ef_eff + 2 * hcfg.M,
-            metric="l2" if hcfg.metric == "l2" else "ip",
+        stats = dict(group_stats[-1][2])  # trace counters: process-wide
+        paths = {st["merge_path"] for _, _, st in group_stats}
+        stats["merge_path"] = paths.pop() if len(paths) == 1 else "mixed"
+        stats["knob_groups"] = len(group_stats)
+        stats["per_shard_topk"] = max(
+            st["per_shard_topk"] for _, _, st in group_stats
         )
-        # ONE host sync for all partitions (vs one np.asarray per (s, g))
-        d_all, i_all = np.asarray(d_all), np.asarray(i_all)
-        keys_flat = stack["keys"]
-        for (s, g, pi, start, cnt) in blocks:
-            sel = sels[g]
-            d = d_all[start: start + cnt]
-            i = i_all[start: start + cnt].astype(np.int64)
-            i = np.where(i >= 0, keys_flat[np.clip(i, 0, None)], -1)
-            sl = slot[sel, g]
-            cand_d[sel, s, sl] = d
-            cand_i[sel, s, sl] = i
-        return handled
+        stats["mean_segments_visited"] = (
+            sum(st["mean_segments_visited"] * n for _, n, st in group_stats)
+            / max(B, 1)
+        )
+        stats["max_segments_visited"] = max(
+            st["max_segments_visited"] for _, _, st in group_stats
+        )
+        return stats
 
     # -- persistence (atomic, resumable) --------------------------------------
 

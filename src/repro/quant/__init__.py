@@ -12,9 +12,12 @@ Pieces:
 * ``codec``    — symmetric per-dimension int8 quantization (scale vector +
   per-vector norm correction), ``quantize_q8``/``dequantize_q8`` and numpy
   reference scoring;
-* ``twostage`` — the CPU/TPU two-stage scan executor state used by
-  ``LannsIndex.query`` (stage-1 int8 scores, top-C candidate selection,
-  batched exact re-rank);
+* ``twostage`` — the CPU/TPU two-stage scan executor state used by the
+  query-plan executor (stage-1 int8 scores, top-C candidate selection);
+* ``rerank``   — the SHARED exact re-rank stage (``ExactStore`` +
+  ``exact_candidate_distances``): both the two-stage scan and the
+  quantized HNSW beam (``core/plan.py``) end their candidate generation
+  here, so returned distances carry no quantization error;
 * the fused Pallas int8 kernel lives in ``repro.kernels.distance_topk_q8``
   with its public wrapper ``repro.kernels.ops.distance_topk_q8``.
 """
@@ -28,11 +31,14 @@ from repro.quant.codec import (
     quantize_q8,
     quantize_queries_q8,
 )
+from repro.quant.rerank import ExactStore, exact_candidate_distances
 
 __all__ = [
+    "ExactStore",
     "Q8Corpus",
     "dequantize_q8",
     "distance_topk_q8_np",
+    "exact_candidate_distances",
     "q8_bytes_per_vector",
     "q8_scores_np",
     "quantize_q8",

@@ -21,13 +21,10 @@ Backend strategy (what actually runs where):
 * candidate selection runs host-side via ``np.argpartition`` (O(N)
   introselect — measured ~3x cheaper than ``lax.top_k`` on CPU for the
   bench shapes) on a zero-copy dlpack view of the device scores.
-* the exact re-rank is density-adaptive: when a lane block's candidate
-  volume ``b * C`` rivals the segment size N (always true for the paper's
-  routed batches over small segments), ONE dense BLAS gemm against the fp32
-  originals + a take_along_axis at the candidates beats b*C row gathers; in
-  the big-N regime it gathers only the candidate rows
-  (``rerank_store='host'`` keeps them in host memory — mmap-friendly —
-  while ``'device'`` serves them from a cached device array).
+* the exact re-rank is the SHARED stage in ``quant/rerank.py`` (also used
+  by the q8 HNSW beam): density-adaptive host scoring (dense gemm when the
+  candidate volume rivals the segment, row gathers otherwise) or a jitted
+  device gather, selected by ``rerank_store``.
 
 Shapes are bucketed exactly like the rest of the serving stack: corpora pad
 to shared pow2 size buckets, lane counts to quarter-pow2 buckets, so the
@@ -44,6 +41,11 @@ import numpy as np
 
 from repro.common.utils import next_pow2_quarter
 from repro.quant.codec import EPS_SCALE, Q8Corpus
+from repro.quant.rerank import (
+    ExactStore,
+    exact_candidate_distances,
+    resolve_store_mode,
+)
 
 # stage-1 fp32-cast gemm is exact (= the int32 dot) while every int8 product
 # sum stays below 2^24: D * 127^2 <= 2^24  =>  D <= 1040.
@@ -79,26 +81,6 @@ def _stage1_scores(q, codes, scale_bias, mult, exact_cast):
     return bias[None, :] + (mult * qsc)[:, None] * dots
 
 
-def _exact_from_dots(dots, n2, metric, xp=np):
-    """Metric correction shared by every stage-2 path (host dense, host
-    gather, device gather): exact distance from raw <q, x> dots and ||x||^2.
-    l2 omits the per-query ||q||^2 constant (see ``run``)."""
-    if metric == "l2":
-        return n2 - 2.0 * dots
-    if metric == "cos":
-        return -dots / xp.sqrt(xp.maximum(n2, 1e-24))
-    return -dots  # ip
-
-
-@partial(jax.jit, static_argnames=("metric",))
-def _rerank_gather_dev(q, cand, vecs, norms2, metric):
-    """Exact candidate distances from a device-resident fp32 store:
-    gather only the candidate rows, one batched contraction."""
-    g = jnp.take(vecs, cand, axis=0)  # (L, C, D)
-    dots = jnp.einsum("lcd,ld->lc", g, q)
-    return _exact_from_dots(dots, jnp.take(norms2, cand), metric, xp=jnp)
-
-
 class _Q8Partition:
     """Device/host state for one quantized (shard, segment) partition."""
 
@@ -123,24 +105,12 @@ class _Q8Partition:
         }
         # exact store: fp32 originals stay host-side (numpy / mmap) unless
         # rerank_store='device' uploads them lazily.
-        self.vectors = np.asarray(vectors, np.float32)
-        self.norms2_exact = np.einsum(
-            "nd,nd->n", self.vectors, self.vectors
-        ).astype(np.float32)
-        self.keys = (
-            np.asarray(keys, np.int64)
-            if keys is not None
-            else np.arange(self.n, dtype=np.int64)
-        )
+        self.store = ExactStore(vectors, keys)
         self.metric = metric
-        self._dev_vecs = None
-        self._dev_norms2 = None
 
-    def device_store(self):
-        if self._dev_vecs is None:
-            self._dev_vecs = jnp.asarray(self.vectors)
-            self._dev_norms2 = jnp.asarray(self.norms2_exact)
-        return self._dev_vecs, self._dev_norms2
+    @property
+    def keys(self):
+        return self.store.keys
 
     def resident_bytes(self) -> int:
         """Scan-resident footprint: codes + scale/bias vectors."""
@@ -154,8 +124,8 @@ class QuantizedScanExecutor:
 
     Built once per index (device codes upload once, like the HNSW stack) and
     reused across query batches; ``run`` scatters per-lane exact results
-    into the executor's compact route slots, mirroring
-    ``_query_hnsw_stacked``.
+    into the executor's compact route slots, mirroring the stacked-HNSW
+    candidates stage in ``core/plan.py``.
     """
 
     def __init__(self, parts, metric: str, rerank_factor: int,
@@ -164,55 +134,13 @@ class QuantizedScanExecutor:
         self.parts = parts
         self.metric = metric
         self.rerank_factor = max(int(rerank_factor), 1)
-        if rerank_store == "auto":
-            rerank_store = (
-                "device" if jax.default_backend() == "tpu" else "host"
-            )
-        if rerank_store not in ("host", "device"):
-            raise ValueError(
-                f"rerank_store={rerank_store!r} — expected 'auto', 'host' "
-                "or 'device'"
-            )
-        self.rerank_store = rerank_store
+        self.rerank_store = resolve_store_mode(rerank_store)
 
     def resident_bytes(self) -> int:
         return sum(p.resident_bytes() for p in self.parts.values())
 
     def exact_store_bytes(self) -> int:
-        return sum(
-            p.vectors.nbytes + p.norms2_exact.nbytes
-            for p in self.parts.values()
-        )
-
-    # -- stage 2 implementations ------------------------------------------
-
-    def _exact_host(self, q, cand, part: _Q8Partition):
-        """Exact candidate distances with the fp32 store on host.
-
-        Density-adaptive: a dense gemm over the whole segment (then a take
-        at the candidates) when the candidate volume rivals the segment
-        size; row gathers otherwise.
-        """
-        b, C = cand.shape
-        v, n2 = part.vectors, part.norms2_exact
-        if b * C >= part.n:  # dense regime: one BLAS gemm beats b*C gathers
-            full = _exact_from_dots(q @ v.T, n2[None, :], self.metric)
-            return np.take_along_axis(full, cand, axis=1)
-        g = np.take(v, cand.reshape(-1), axis=0).reshape(b, C, -1)
-        dots = np.matmul(g, q[:, :, None])[:, :, 0]
-        return _exact_from_dots(dots, np.take(n2, cand), self.metric)
-
-    def _exact_device(self, q, cand, part: _Q8Partition, l_pad: int):
-        vecs, n2 = part.device_store()
-        b, C = cand.shape
-        qp = np.zeros((l_pad, q.shape[1]), np.float32)
-        qp[:b] = q
-        cp = np.zeros((l_pad, C), np.int32)
-        cp[:b] = cand
-        ex = _rerank_gather_dev(
-            jnp.asarray(qp), jnp.asarray(cp), vecs, n2, self.metric
-        )
-        return np.asarray(ex)[:b]
+        return sum(p.store.nbytes() for p in self.parts.values())
 
     # -- the full two-stage pass ------------------------------------------
 
@@ -281,10 +209,10 @@ class QuantizedScanExecutor:
                 cand = np.broadcast_to(
                     np.arange(C, dtype=np.int32), (b, C)
                 ).copy()
-            if self.rerank_store == "device":
-                ex = self._exact_device(q_lane, cand, part, l_pad)
-            else:
-                ex = self._exact_host(q_lane, cand, part)
+            ex = exact_candidate_distances(
+                q_lane, cand, part.store, self.metric,
+                mode=self.rerank_store, l_pad=l_pad,
+            )
             kk = min(W, C)
             if kk < C:
                 loc = np.argpartition(ex, kk - 1, axis=1)[:, :kk]

@@ -10,6 +10,12 @@ throughput.  This module supplies that arrival process:
   offered-load axis means);
 * ``fixed`` — open loop, deterministic ``1/rate_qps`` gaps (isolates
   queueing effects from arrival burstiness);
+* ``mmpp`` — open loop, two-state ON/OFF Markov-modulated Poisson: Poisson
+  arrivals at ``rate_qps / mmpp_on_frac`` during exponentially-distributed
+  ON periods, silence during OFF periods, mean rate ``rate_qps``.  The
+  standard bursty-traffic model: same offered load as ``poisson`` but
+  arrivals clump, so queues build during bursts and the p99 gap vs the
+  matching Poisson point is pure burstiness effect;
 * ``closed`` — ``concurrency`` synchronous clients, each submitting its
   next query the moment the previous one completes.  Offered load is
   implicit; the achieved QPS at high concurrency IS the saturation
@@ -40,24 +46,70 @@ import numpy as np
 
 from repro.serve.engine import AsyncAnnFrontend
 
-PROCESSES = ("poisson", "fixed", "closed")
+PROCESSES = ("poisson", "fixed", "mmpp", "closed")
 
 
 def arrival_gaps(
-    process: str, rate_qps: float, n: int, seed: int = 0
+    process: str,
+    rate_qps: float,
+    n: int,
+    seed: int = 0,
+    *,
+    mmpp_on_frac: float = 0.4,
+    mmpp_cycle_s: float = 0.2,
 ) -> np.ndarray:
-    """(n,) inter-arrival gaps in seconds; deterministic in ``seed``."""
-    if process not in ("poisson", "fixed"):
+    """(n,) inter-arrival gaps in seconds; deterministic in ``seed``.
+
+    ``mmpp`` knobs (ignored for other processes): ``mmpp_on_frac`` is the
+    long-run fraction of time the source is ON (arrivals run at
+    ``rate_qps / mmpp_on_frac`` while ON, so the mean rate stays
+    ``rate_qps``); ``mmpp_cycle_s`` is the mean ON + mean OFF sojourn
+    (exponential holding times — ``on_frac=1`` degenerates to plain
+    Poisson).  Like the other open-loop processes, the sequence is a pure
+    function of its arguments.
+    """
+    if process not in ("poisson", "fixed", "mmpp"):
         raise ValueError(
-            f"process={process!r} has no gap sequence — expected 'poisson' "
-            "or 'fixed' ('closed' is driven by completions, not a clock)"
+            f"process={process!r} has no gap sequence — expected 'poisson', "
+            "'fixed' or 'mmpp' ('closed' is driven by completions, not a "
+            "clock)"
         )
     if rate_qps <= 0:
         raise ValueError(f"rate_qps={rate_qps} must be > 0")
     if process == "fixed":
         return np.full(n, 1.0 / rate_qps)
     rng = np.random.default_rng(seed)
-    return rng.exponential(1.0 / rate_qps, n)
+    if process == "poisson":
+        return rng.exponential(1.0 / rate_qps, n)
+    # mmpp: alternate exponential ON/OFF sojourns; arrivals are a Poisson
+    # stream at lam_on inside ON windows.  A draw that crosses the window
+    # edge is discarded and redrawn in the next ON window — valid by the
+    # memorylessness of the exponential, and it keeps the generator a
+    # simple forward walk.
+    if not 0.0 < mmpp_on_frac <= 1.0:
+        raise ValueError(f"mmpp_on_frac={mmpp_on_frac} must be in (0, 1]")
+    if mmpp_cycle_s <= 0:
+        raise ValueError(f"mmpp_cycle_s={mmpp_cycle_s} must be > 0")
+    lam_on = rate_qps / mmpp_on_frac
+    mean_on = mmpp_on_frac * mmpp_cycle_s
+    mean_off = (1.0 - mmpp_on_frac) * mmpp_cycle_s
+    gaps = np.empty(n, np.float64)
+    t = last = 0.0
+    on_end = rng.exponential(mean_on)
+    i = 0
+    while i < n:
+        g = rng.exponential(1.0 / lam_on)
+        if t + g <= on_end:
+            t += g
+            gaps[i] = t - last
+            last = t
+            i += 1
+        else:
+            t = on_end
+            if mean_off > 0:
+                t += rng.exponential(mean_off)
+            on_end = t + rng.exponential(mean_on)
+    return gaps
 
 
 @dataclasses.dataclass
@@ -146,6 +198,7 @@ def run_load_point(
     max_wait_ms: float = 2.0,
     ef: Optional[int] = None,
     collect_stats: bool = False,
+    knob_mix: Optional[Sequence[tuple]] = None,
 ) -> LoadResult:
     """Drive one offered-load point end to end and summarize it.
 
@@ -153,6 +206,12 @@ def run_load_point(
     ``duration_s`` seconds under the chosen process, then drains — so every
     submitted query's completion (including queueing built up past
     saturation) is measured.  Queries cycle through ``queries`` rows.
+
+    ``knob_mix`` generates a MIXED workload: a sequence of per-request
+    ``(topk, ef)`` overrides (entries may be None -> the frontend default)
+    that arrivals cycle through deterministically — arrival j carries
+    ``knob_mix[j % len(knob_mix)]``, so the workload is reproducible and
+    every formed micro-batch exercises the executor's knob-group path.
     """
     if process not in PROCESSES:
         raise ValueError(f"process={process!r} — expected one of {PROCESSES}")
@@ -161,6 +220,13 @@ def run_load_point(
         ef=ef, collect_stats=collect_stats,
     )
     n_pool = len(queries)
+
+    def _submit(j: int):
+        if knob_mix:
+            tk, efv = knob_mix[j % len(knob_mix)]
+            return fe.submit(queries[j % n_pool], topk=tk, ef=efv)
+        return fe.submit(queries[j % n_pool])
+
     fe.start()
     t0 = time.perf_counter()
     try:
@@ -170,7 +236,7 @@ def run_load_point(
             def client(ci: int):
                 qi = ci
                 while time.perf_counter() < stop_at:
-                    req = fe.submit(queries[qi % n_pool])
+                    req = _submit(qi)
                     qi += concurrency
                     req.wait()
 
@@ -199,7 +265,7 @@ def run_load_point(
                 if now >= deadline:
                     break
                 if now >= t_next:
-                    fe.submit(queries[qi % n_pool])
+                    _submit(qi)
                     qi += 1
                     t_next += gaps[gi % len(gaps)]
                     gi += 1

@@ -311,3 +311,90 @@ def test_run_load_point_validation(index_and_queries):
         run_load_point(idx, queries, process="poisson", rate_qps=None)
     with pytest.raises(ValueError):
         run_load_point(idx, queries, process="uniform", rate_qps=10.0)
+
+
+# ---------------------------------------------------------------------------
+# MMPP bursty arrivals + per-request knobs under load
+# ---------------------------------------------------------------------------
+
+
+def test_mmpp_gaps_seeded_and_bursty():
+    """Pure in (process, rate, n, seed); mean rate ~ rate_qps; squared
+    coefficient of variation far above Poisson's 1 (the burstiness)."""
+    g1 = arrival_gaps("mmpp", 400.0, 3000, seed=11)
+    g2 = arrival_gaps("mmpp", 400.0, 3000, seed=11)
+    g3 = arrival_gaps("mmpp", 400.0, 3000, seed=12)
+    assert np.array_equal(g1, g2)
+    assert not np.array_equal(g1, g3)
+    assert (g1 >= 0).all()
+    # long-run rate ~ rate_qps (loose: ON/OFF cycles inflate the variance)
+    assert 0.2 / 400 < g1.mean() < 5.0 / 400
+    cv2 = (g1.std() / g1.mean()) ** 2
+    gp = arrival_gaps("poisson", 400.0, 3000, seed=11)
+    cv2_poisson = (gp.std() / gp.mean()) ** 2
+    assert cv2 > 3.0 * cv2_poisson, (cv2, cv2_poisson)
+    # on_frac=1 degenerates to plain Poisson statistics (cv2 ~ 1)
+    g_on = arrival_gaps("mmpp", 400.0, 3000, seed=11, mmpp_on_frac=1.0)
+    assert 0.5 < (g_on.std() / g_on.mean()) ** 2 < 2.0
+
+
+def test_mmpp_validation():
+    with pytest.raises(ValueError, match="mmpp_on_frac"):
+        arrival_gaps("mmpp", 100.0, 8, mmpp_on_frac=0.0)
+    with pytest.raises(ValueError, match="mmpp_on_frac"):
+        arrival_gaps("mmpp", 100.0, 8, mmpp_on_frac=1.5)
+    with pytest.raises(ValueError, match="mmpp_cycle_s"):
+        arrival_gaps("mmpp", 100.0, 8, mmpp_cycle_s=0.0)
+
+
+def test_async_per_request_knobs_bit_identical(index_and_queries):
+    """Requests with mixed (topk, ef) ride one formed batch; each result is
+    bit-identical to the direct mixed query over the same batch."""
+    idx, queries = index_and_queries
+    with AsyncAnnFrontend(idx, topk=10, max_batch=8, max_wait_ms=1e9) as fe:
+        reqs = []
+        for j in range(8):
+            reqs.append(fe.submit(
+                queries[j],
+                topk=(5 if j % 2 else None),
+                ef=(32 if j in (2, 3) else None),
+            ))
+        assert all(r.wait(WAIT_S) for r in reqs)
+    tk = np.array([10 if r.topk is None else r.topk for r in reqs])
+    ef = np.array([0 if r.ef is None else r.ef for r in reqs])
+    d, i = idx.query(queries[:8], tk, ef=ef)
+    for j, r in enumerate(reqs):
+        assert r.dists.shape == (tk[j],) and r.ids.shape == (tk[j],)
+        assert np.array_equal(r.ids, i[j, : tk[j]])
+        assert np.array_equal(r.dists, d[j, : tk[j]])
+
+
+def test_invalid_knobs_fail_at_submit_not_in_batcher(index_and_queries):
+    """A bad per-request knob must raise in the SUBMITTER's thread and
+    leave the batcher (and every other request) unharmed."""
+    idx, queries = index_and_queries
+    with AsyncAnnFrontend(idx, topk=10, max_batch=4, max_wait_ms=5.0) as fe:
+        with pytest.raises(ValueError, match="topk"):
+            fe.submit(queries[0], topk=0)
+        with pytest.raises(ValueError, match="ef"):
+            fe.submit(queries[0], ef=-5)
+        good = fe.submit(queries[1], topk=3)
+        assert good.wait(WAIT_S) and good.done
+        assert fe.error is None
+    sync = AnnFrontend(idx, topk=10, max_batch=4)
+    with pytest.raises(ValueError, match="topk"):
+        sync.submit(queries[0], topk=0)
+
+
+def test_run_load_point_mmpp_with_knob_mix(index_and_queries):
+    """MMPP arrivals + a deterministic (topk, ef) mix: everything submitted
+    completes, and per-request result widths follow the mix."""
+    idx, queries = index_and_queries
+    mix = [(None, None), (5, None), (20, 48)]
+    res = run_load_point(
+        idx, queries, process="mmpp", rate_qps=300.0, duration_s=0.3,
+        topk=10, max_batch=8, max_wait_ms=2.0, seed=5, knob_mix=mix,
+    )
+    assert res.process == "mmpp" and res.offered_qps == 300.0
+    assert res.completed > 0 and res.completed == res.submitted
+    assert sum(b * c for b, c in res.batch_hist.items()) == res.completed

@@ -1,0 +1,178 @@
+"""Quantized HNSW beam (engine='hnsw' x quantized='q8').
+
+Candidate generation walks the graph over int8 codes; the shared exact
+re-rank stage then re-scores the beam's candidates against the fp32
+originals, so returned distances are EXACT — quantization can only affect
+which candidates reach the re-rank, and at bench scales it costs ~nothing
+(recall parity asserted below, the ISSUE's 0.01 acceptance bound with
+margin).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    LannsConfig,
+    LannsIndex,
+    brute_force_topk,
+    recall_at_k,
+)
+from repro.data.synthetic import clustered_vectors
+
+D = 24
+
+
+def _cfg(**kw):
+    base = dict(
+        num_shards=1, num_segments=4, segmenter="apd", engine="hnsw",
+        hnsw_m=8, ef_construction=60, ef_search=80, alpha=0.15,
+    )
+    base.update(kw)
+    return LannsConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def world():
+    data = clustered_vectors(2500, D, n_clusters=32, seed=0)
+    queries = clustered_vectors(64, D, n_clusters=32, seed=1)
+    return data, queries
+
+
+@pytest.fixture(scope="module")
+def fp32_and_q8(world):
+    data, _ = world
+    idx_fp = LannsIndex(_cfg()).build(data)
+    idx_q8 = LannsIndex(_cfg(quantized="q8")).build(data)
+    return idx_fp, idx_q8
+
+
+def test_recall_parity_vs_fp32_hnsw(world, fp32_and_q8):
+    """The acceptance bound: recall@k within 0.01 of the fp32 beam, both
+    against ground truth and relative to the fp32 results."""
+    data, queries = world
+    idx_fp, idx_q8 = fp32_and_q8
+    td, ti = brute_force_topk(queries, data, 20)
+    d_fp, i_fp = idx_fp.query(queries, 20)
+    d_q8, i_q8 = idx_q8.query(queries, 20)
+    r_fp = recall_at_k(i_fp, ti, 20)
+    r_q8 = recall_at_k(i_q8, ti, 20)
+    assert r_q8 >= r_fp - 0.01, (r_fp, r_q8)
+    assert recall_at_k(i_q8, i_fp, 20) >= 0.99
+
+
+def test_distances_are_exact(world, fp32_and_q8):
+    """Re-ranked distances must be TRUE squared L2 distances to the
+    returned ids — bit-comparable to the fp32 beam wherever ids agree."""
+    data, queries = world
+    idx_fp, idx_q8 = fp32_and_q8
+    d_fp, i_fp = idx_fp.query(queries, 10)
+    d_q8, i_q8 = idx_q8.query(queries, 10)
+    valid = (i_q8 >= 0) & np.isfinite(d_q8)
+    diff = data[np.clip(i_q8, 0, None)] - queries[:, None, :]
+    true_d = np.einsum("bkd,bkd->bk", diff, diff)
+    np.testing.assert_allclose(
+        d_q8[valid], true_d[valid], rtol=1e-4, atol=1e-3
+    )
+    same = i_q8 == i_fp
+    np.testing.assert_allclose(
+        d_q8[same & valid], d_fp[same & valid], rtol=1e-4, atol=1e-3
+    )
+
+
+@pytest.mark.parametrize("metric", ["cos", "ip", "mips"])
+def test_metrics_recall_parity(metric):
+    data = clustered_vectors(1500, 16, n_clusters=16, seed=0)
+    if metric == "mips":
+        rng = np.random.default_rng(1)
+        data = data * rng.uniform(0.5, 2.0, (len(data), 1)).astype(np.float32)
+    queries = clustered_vectors(40, 16, n_clusters=16, seed=1)
+    kw = dict(metric=metric)
+    i_res = {}
+    for quant in ("none", "q8"):
+        idx = LannsIndex(_cfg(quantized=quant, **kw)).build(data)
+        _, i_res[quant] = idx.query(queries, 10)
+    assert recall_at_k(i_res["q8"], i_res["none"], 10) >= 0.95, metric
+
+
+def test_resident_codes_are_int8(fp32_and_q8):
+    """The q8 stack's device corpus must be the int8 codes (the memory
+    win), with norms2 riding along; the fp32 stack is never built."""
+    _, idx_q8 = fp32_and_q8
+    stack = idx_q8._hnsw_stack(quantized=True)
+    assert stack["arrs"]["vectors"].dtype == np.int8
+    assert stack["arrs"]["norms2"].dtype == np.float32
+    assert idx_q8._stack.get(False) is None  # fp32 vectors never uploaded
+    codes_b = stack["arrs"]["vectors"].nbytes + stack["arrs"]["norms2"].nbytes
+    fp32_b = 4 * stack["arrs"]["vectors"].size
+    assert codes_b < 0.5 * fp32_b
+
+
+def test_trace_stability(world, fp32_and_q8):
+    """Re-running seen batch windows must add no new flat-beam traces: lane
+    counts pad to quarter-pow2 buckets, so the trace set is a function of
+    the bucket grid, not of which queries arrive."""
+    data, queries = world
+    _, idx_q8 = fp32_and_q8
+    windows = [(0, 16), (8, 24), (16, 32), (24, 40)]
+    for lo, hi in windows:  # warm every window's lane bucket once
+        idx_q8.query(queries[lo:hi], 10)
+    _, _, s0 = idx_q8.query(queries[:16], 10, return_stats=True)
+    for lo, hi in windows * 2:
+        idx_q8.query(queries[lo:hi], 10)
+    _, _, s1 = idx_q8.query(queries[:16], 10, return_stats=True)
+    assert s1["beam_traces_flat"] == s0["beam_traces_flat"]
+
+
+def test_mixed_knobs_on_q8_hnsw(world, fp32_and_q8):
+    data, queries = world
+    _, idx_q8 = fp32_and_q8
+    tk = np.array([5, 10] * 8)
+    ef = np.array([0, 96] * 8)
+    d, i = idx_q8.query(queries[:16], tk, ef=ef)
+    for tkv, efv in ((5, 0), (10, 96)):
+        rows = np.nonzero((tk == tkv) & (ef == efv))[0]
+        dd, ii = idx_q8.query(queries[rows], tkv, ef=(efv or None))
+        assert np.array_equal(i[rows, :tkv], ii)
+        assert np.array_equal(d[rows, :tkv], dd)
+
+
+def test_save_load_roundtrip(tmp_path, world, fp32_and_q8):
+    """Quantized hnsw artifacts persist (codes saved next to the graph) and
+    reload bit-identically; the loaded index re-serves through the beam."""
+    data, queries = world
+    _, idx_q8 = fp32_and_q8
+    d1, i1 = idx_q8.query(queries, 10)
+    root = str(tmp_path / "q8_hnsw")
+    idx_q8.save(root)
+    idx2 = LannsIndex.load(root)
+    assert idx2.config.quantized == "q8" and idx2.config.engine == "hnsw"
+    assert all(
+        p.q8 is not None for p in idx2.partitions.values() if p.size > 0
+    )
+    d2, i2 = idx2.query(queries, 10)
+    assert np.array_equal(i1, i2)
+    np.testing.assert_allclose(d1, d2, rtol=1e-6)
+
+
+def test_empty_batch_and_stats(fp32_and_q8):
+    _, idx_q8 = fp32_and_q8
+    empty = np.zeros((0, D), np.float32)
+    d, i, stats = idx_q8.query(empty, 7, return_stats=True)
+    assert d.shape == (0, 7) and i.shape == (0, 7)
+    assert stats["merge_path"] == "two_level"
+    _, _, full = idx_q8.query(np.zeros((2, D), np.float32), 7,
+                              return_stats=True)
+    assert set(stats) == set(full)
+
+
+def test_rerank_store_host_device_agree(world):
+    data, queries = world
+    small = data[:1200]
+    idx_h = LannsIndex(_cfg(quantized="q8", rerank_store="host")).build(small)
+    idx_d = LannsIndex(_cfg(quantized="q8", rerank_store="device")).build(
+        small
+    )
+    dh, ih = idx_h.query(queries, 10)
+    dd, id_ = idx_d.query(queries, 10)
+    assert np.array_equal(ih, id_)
+    np.testing.assert_allclose(dh, dd, rtol=1e-5, atol=1e-5)

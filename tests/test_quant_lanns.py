@@ -155,11 +155,14 @@ def test_q8_empty_batch_and_stats(world):
 def test_config_validation():
     with pytest.raises(ValueError, match="quantized"):
         LannsIndex(LannsConfig(quantized="int4"))
-    with pytest.raises(ValueError, match="engine='scan'"):
-        LannsIndex(LannsConfig(engine="hnsw", quantized="q8"))
     with pytest.raises(ValueError, match="rerank_store"):
         LannsIndex(LannsConfig(engine="scan", quantized="q8",
                                rerank_store="gpu"))
+    # q8 + hnsw is a supported composition now (the quantized beam); only
+    # the flat stacked dispatch serves it.
+    idx = LannsIndex(LannsConfig(engine="hnsw", quantized="q8"))
+    with pytest.raises(ValueError, match="hnsw_mode='stacked'"):
+        idx.query(np.zeros((1, 8), np.float32), 5, hnsw_mode="legacy")
 
 
 def test_fp32_path_untouched_when_quantized_off(world):
