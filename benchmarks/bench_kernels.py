@@ -25,8 +25,8 @@ def run_merge():
     for (R, C, k) in [(1024, 64, 16), (1024, 512, 100), (4096, 128, 32)]:
         d = jnp.asarray(rng.standard_normal((R, C)).astype(np.float32))
         i = jnp.asarray(rng.integers(0, C // 2, (R, C)).astype(np.int32))
-        f_lex = jax.jit(lambda d, i: merge_topk(d, i, k))
-        f_sca = jax.jit(lambda d, i: merge_topk_scatter(d, i, k))
+        f_lex = jax.jit(lambda d, i, k=k: merge_topk(d, i, k))
+        f_sca = jax.jit(lambda d, i, k=k: merge_topk_scatter(d, i, k))
         f_lex(d, i)[0].block_until_ready()
         f_sca(d, i)[0].block_until_ready()
         t_lex, _ = time_call(lambda: f_lex(d, i)[0].block_until_ready(),
@@ -48,8 +48,10 @@ def run():
         q = jnp.asarray(rng.standard_normal((B, D)).astype(np.float32))
         x = jnp.asarray(rng.standard_normal((N, D)).astype(np.float32))
 
-        f_ref = jax.jit(lambda q, x: ref.distance_topk_ref(q, x, k, "l2"))
-        f_blk = jax.jit(lambda q, x: ref.distance_topk_blocked(q, x, k, "l2"))
+        f_ref = jax.jit(lambda q, x, k=k: ref.distance_topk_ref(q, x, k, "l2"))
+        f_blk = jax.jit(
+            lambda q, x, k=k: ref.distance_topk_blocked(q, x, k, "l2")
+        )
         f_ref(q, x)[0].block_until_ready()
         f_blk(q, x)[0].block_until_ready()
         t_ref, _ = time_call(lambda: f_ref(q, x)[0].block_until_ready(), repeats=5)

@@ -68,9 +68,9 @@ def run(
         alpha=0.15,
     )
     idx = LannsIndex(cfg).build(corpus)
-    kw = dict(
-        topk=topk, max_batch=max_batch, max_wait_ms=max_wait_ms,
-    )
+    kw = {
+        "topk": topk, "max_batch": max_batch, "max_wait_ms": max_wait_ms,
+    }
     # pre-compile the full serving trace set (every pow2 batch bucket x
     # corpus bucket) so no timed window pays an XLA compile — first-traffic
     # compiles are a deployment concern warm_traces exists to solve, not
@@ -133,7 +133,7 @@ def run(
     }
     payload = bench_payload(
         "latency_load",
-        config=dict(
+        config=dict(  # noqa: C408 -- kwargs mirror the CLI flag names
             n=n, d=d, topk=topk, duration_s=duration_s,
             max_batch=max_batch, max_wait_ms=max_wait_ms,
             load_fracs=list(load_fracs), seed=seed,

@@ -204,7 +204,7 @@ def run(n=16_000, d=64, topk=100, duration_s=3.0, n_hnsw=12_000,
     )
     payload = bench_payload(
         "online_qps",
-        config=dict(n=n, d=d, topk=topk, duration_s=duration_s,
+        config=dict(n=n, d=d, topk=topk, duration_s=duration_s,  # noqa: C408 -- kwargs mirror the CLI flag names
                     n_hnsw=n_hnsw, num_segments=cfg.num_segments,
                     segmenter=cfg.segmenter),
         metrics=metrics,

@@ -76,7 +76,7 @@ def run(n=20_000, d=64, n_queries=300, topk=100, engine="scan",
         # distinct bench name: the committed baseline entry for "recall"
         # gates the quantized protocol; the table-1 sweep is reported only.
         "recall_table1",
-        config=dict(n=n, d=d, n_queries=n_queries, topk=topk, engine=engine,
+        config=dict(n=n, d=d, n_queries=n_queries, topk=topk, engine=engine,  # noqa: C408 -- kwargs mirror the CLI flag names
                     mode="table1"),
         metrics={
             f"recall_at_10_{name}": table[10]
@@ -121,7 +121,7 @@ def run_quantized(n=20_000, d=64, batch=1024, topk=100, smoke=False,
     bench = "recall" if engine == "scan" else "recall_q8_hnsw"
     payload = bench_payload(
         bench,
-        config=dict(n=n, d=d, batch=batch, topk=topk, mode="quantized",
+        config=dict(n=n, d=d, batch=batch, topk=topk, mode="quantized",  # noqa: C408 -- kwargs mirror the CLI flag names
                     engine=engine),
         metrics={
             f"qps_{engine}_fp32": stats["qps_fp32"],

@@ -131,8 +131,8 @@ def quantized_compare(
     """
     from repro.core import LannsConfig, LannsIndex, recall_at_k
 
-    base = dict(num_shards=1, num_segments=8, segmenter="apd",
-                engine=engine, alpha=0.15)
+    base = {"num_shards": 1, "num_segments": 8, "segmenter": "apd",
+            "engine": engine, "alpha": 0.15}
     if engine == "hnsw":
         base.update(hnsw_m=12, ef_construction=80,
                     ef_search=max(topk, 100))

@@ -1,0 +1,69 @@
+"""repro.analysis — static + runtime invariant checks for the serving stack.
+
+Three coordinated passes (see analysis/README.md for the rule catalog):
+
+* ``tracelint``  — jit trace-stability lint over hot-path functions
+  (LANNS001-006);
+* ``locks``      — lock-discipline proof over ``_GUARDED_BY`` registries
+  (LANNS010-013), with a runtime twin in ``runtime``
+  (InstrumentedLock / race_stress);
+* ``kernelcheck``— Pallas/Mosaic constraint check over kernels/
+  (LANNS020-024).
+
+CLI: ``python -m repro.analysis [--strict] [paths...]`` and
+``python -m repro.analysis --race-stress --threads 8 --duration 30``.
+"""
+
+from __future__ import annotations
+
+import os
+
+from . import kernelcheck, locks, tracelint
+from .rules import RULES, Finding, SourceFile
+from .sentinels import RetraceSentinel
+
+__all__ = [
+    "RULES", "Finding", "SourceFile", "RetraceSentinel",
+    "analyze_file", "analyze_paths",
+]
+
+_PASSES = (tracelint.run, locks.run, kernelcheck.run)
+
+
+def analyze_file(path: str, text: str | None = None) -> list[Finding]:
+    """All findings for one module, suppressions applied, deduped."""
+    src = SourceFile.parse(path, text)
+    findings: list[Finding] = src.meta_findings()
+    for run in _PASSES:
+        findings.extend(run(src))
+    src.apply_suppressions(findings)
+    seen: set[tuple[str, str, int]] = set()
+    out: list[Finding] = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.code)):
+        key = (f.code, f.path, f.line)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def _py_files(paths: list[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs if not d.startswith((".", "__")))
+            out.extend(
+                os.path.join(root, f) for f in sorted(files)
+                if f.endswith(".py")
+            )
+    return out
+
+
+def analyze_paths(paths: list[str]) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in _py_files(paths):
+        findings.extend(analyze_file(path))
+    return findings

@@ -1,0 +1,93 @@
+"""CLI: ``python -m repro.analysis [--strict] [paths...]``.
+
+Default mode lints the given paths (default: the installed ``repro``
+package sources) with all three static passes and prints a per-rule
+summary including counted, justified suppressions.  ``--strict`` exits
+non-zero when any UNSUPPRESSED finding remains — the CI gate.
+
+``--race-stress`` runs the seeded multi-submitter lifecycle churn with
+``InstrumentedLock`` lock-order recording instead (the nightly CI job):
+exits non-zero on any lock-order cycle or guarded-attribute violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from collections import Counter
+
+from . import analyze_paths
+from .rules import RULES
+
+
+def _default_paths() -> list[str]:
+    import repro
+
+    if getattr(repro, "__file__", None):
+        return [os.path.dirname(os.path.abspath(repro.__file__))]
+    return [os.path.abspath(p) for p in repro.__path__]  # namespace package
+
+
+def _lint(args: argparse.Namespace) -> int:
+    paths = args.paths or _default_paths()
+    findings = analyze_paths(paths)
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    for f in findings:
+        print(f.render())
+    print()
+    print(f"repro.analysis: {len(active)} finding(s), "
+          f"{len(suppressed)} suppressed, over {len(paths)} path(s)")
+    for code, n in sorted(Counter(f.code for f in active).items()):
+        print(f"  {code} ({RULES[code].name}): {n}")
+    if suppressed:
+        print("suppressions (justification required and counted):")
+        for f in suppressed:
+            print(f"  {f.path}:{f.line}: {f.code} -- {f.justification}")
+    return 1 if active and (args.strict or args.exit_nonzero) else 0
+
+
+def _race_stress(args: argparse.Namespace) -> int:
+    from .runtime import race_stress
+
+    def progress(report):
+        print(f"  cycle {report.cycles_run}: {report.submitted} submitted, "
+              f"{report.completed} completed", flush=True)
+
+    print(f"race-stress: threads={args.threads} duration={args.duration}s "
+          f"seed={args.seed}", flush=True)
+    report = race_stress(threads=args.threads, duration_s=args.duration,
+                         seed=args.seed, progress=progress)
+    print(report.render())
+    return 0 if report.ok else 1
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Trace-stability, lock-discipline, and Pallas-kernel "
+                    "invariant checks.",
+    )
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (default: the repro "
+                         "package)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any unsuppressed finding remains")
+    ap.add_argument("--exit-nonzero", action="store_true",
+                    help=argparse.SUPPRESS)  # legacy alias for --strict
+    ap.add_argument("--race-stress", action="store_true",
+                    help="run the seeded multi-submitter lock-order stress "
+                         "instead of linting")
+    ap.add_argument("--threads", type=int, default=8)
+    ap.add_argument("--duration", type=float, default=30.0,
+                    help="race-stress wall-clock budget in seconds")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.race_stress:
+        return _race_stress(args)
+    return _lint(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

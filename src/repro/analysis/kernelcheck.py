@@ -1,0 +1,123 @@
+"""Static Pallas-kernel constraint check (LANNS020-024).
+
+Applies to modules living under a ``kernels/`` directory.  Kernel BODIES are
+detected structurally: any function with a ``*_ref`` parameter (the Ref
+calling convention of ``pl.pallas_call``).  Launchers are functions that
+call ``pl.pallas_call``.
+
+The rules encode the Mosaic/TPU lowering constraints this repo already
+relies on (see /opt/skills guides and kernels/README commentary):
+
+* no float64 anywhere in a kernels module (TPU has no f64; x64 is globally
+  disabled but a literal would silently truncate);
+* MXU dots must pin ``preferred_element_type`` (f32 accumulation for int8
+  codes is the q8 contract);
+* iota must be >= 2D (``broadcasted_iota``), never 1D ``jnp.arange``;
+* no sort/argsort/top_k inside a kernel body — Mosaic cannot lower them,
+  which is why the bitonic compare/select network exists;
+* every launcher asserts block divisibility of its padded operand shapes
+  before ``pallas_call`` (grids silently drop the ragged tail otherwise).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from .rules import Finding, SourceFile, attr_chain
+
+_F64_NAMES = {"float64", "f64", "double"}
+_SORT_TAILS = {"sort", "argsort", "top_k", "sort_key_val"}
+_DOT_TAILS = {"dot_general", "dot", "matmul"}
+
+
+def is_kernels_module(path: str) -> bool:
+    parts = os.path.normpath(path).split(os.sep)
+    return "kernels" in parts[:-1]
+
+
+def _is_kernel_body(fn: ast.FunctionDef) -> bool:
+    return any(a.arg.endswith("_ref") for a in fn.args.args)
+
+
+def _calls_pallas_call(fn: ast.FunctionDef) -> bool:
+    return any(
+        isinstance(node, ast.Call)
+        and attr_chain(node.func).split(".")[-1] == "pallas_call"
+        for node in ast.walk(fn)
+    )
+
+
+def _has_divisibility_assert(fn: ast.FunctionDef) -> bool:
+    return any(
+        isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod)
+        for node in ast.walk(fn)
+        if isinstance(node, ast.Assert)
+        for sub in ast.walk(node.test)
+    )
+
+
+def run(src: SourceFile) -> list[Finding]:
+    if not is_kernels_module(src.path):
+        return []
+    findings: list[Finding] = []
+
+    # LANNS020: module-wide f64 ban (dtype literals or attribute refs)
+    for node in ast.walk(src.tree):
+        name = None
+        if isinstance(node, ast.Attribute) and node.attr in _F64_NAMES:
+            name = attr_chain(node)
+        elif isinstance(node, ast.Constant) and node.value == "float64":
+            name = "'float64'"
+        if name:
+            findings.append(Finding(
+                "LANNS020", src.path, node.lineno,
+                f"float64 reference `{name}` in a kernels module — TPU "
+                "Pallas has no f64",
+            ))
+
+    for fn in ast.walk(src.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if _is_kernel_body(fn):
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = attr_chain(node.func)
+                tail = chain.split(".")[-1] if chain else ""
+                if tail in _DOT_TAILS:
+                    kws = {kw.arg for kw in node.keywords}
+                    if "preferred_element_type" not in kws:
+                        findings.append(Finding(
+                            "LANNS021", src.path, node.lineno,
+                            f"`{chain}` in kernel body `{fn.name}` without "
+                            "preferred_element_type — MXU accumulator "
+                            "dtype is left to the lowering",
+                        ))
+                if tail in ("arange", "iota"):
+                    findings.append(Finding(
+                        "LANNS022", src.path, node.lineno,
+                        f"1D `{chain}` in kernel body `{fn.name}` — Mosaic "
+                        "requires broadcasted_iota (>= 2D)",
+                    ))
+                if tail in _SORT_TAILS:
+                    findings.append(Finding(
+                        "LANNS023", src.path, node.lineno,
+                        f"`{chain}` in kernel body `{fn.name}` — Mosaic "
+                        "cannot lower sorts; use a compare/select network",
+                    ))
+            for node in ast.walk(fn):
+                if isinstance(node, ast.BinOp) and \
+                        isinstance(node.op, ast.MatMult):
+                    findings.append(Finding(
+                        "LANNS021", src.path, node.lineno,
+                        f"`@` matmul in kernel body `{fn.name}` cannot pin "
+                        "preferred_element_type — use lax.dot_general",
+                    ))
+        elif _calls_pallas_call(fn) and not _has_divisibility_assert(fn):
+            findings.append(Finding(
+                "LANNS024", src.path, fn.lineno,
+                f"launcher `{fn.name}` calls pallas_call without a block "
+                "divisibility assert on its padded shapes",
+            ))
+    return findings

@@ -1,0 +1,205 @@
+"""Rule registry, findings, and inline directive parsing for repro.analysis.
+
+Directives are comments of the form ``# lanns: <directive>``:
+
+* ``# lanns: hotpath`` — marks the function defined on (or directly below)
+  this line as a serving hot-path root.  The trace lint checks the marked
+  function plus everything reachable from it inside the same module.
+* ``# lanns: noqa[LANNS001] -- justification`` — suppress the named rule(s)
+  on this line.  The justification after ``--`` is REQUIRED: a bare noqa is
+  itself a finding (LANNS000) and cannot be suppressed.  Multiple codes:
+  ``noqa[LANNS001,LANNS003]``.
+* ``# lanns: holds[_cond]`` — declares that the function defined on this
+  line must only be called with ``self._cond`` held; the lock checker then
+  treats guarded-attribute accesses inside it as covered.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+
+_DIRECTIVE_RE = re.compile(r"#\s*lanns:\s*(?P<body>.+?)\s*$")
+_NOQA_RE = re.compile(
+    r"noqa\[(?P<codes>[A-Z0-9,\s]+)\](?:\s*--\s*(?P<just>.+))?$"
+)
+_HOLDS_RE = re.compile(r"holds\[(?P<lock>\w+)\]$")
+
+
+@dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    summary: str
+
+
+RULES: dict[str, Rule] = {
+    r.code: r
+    for r in (
+        # -- meta ----------------------------------------------------------
+        Rule("LANNS000", "bare-noqa",
+             "`# lanns: noqa[...]` without a `-- justification` tail"),
+        # -- trace stability (hot-path functions) --------------------------
+        Rule("LANNS001", "item-sync",
+             ".item() on a hot path forces a device->host sync per element"),
+        Rule("LANNS002", "scalar-sync",
+             "float()/int()/bool() of a device value blocks on the device"),
+        Rule("LANNS003", "asarray-sync",
+             "np.asarray/np.array/np.from_dlpack of a device value is a "
+             "host sync; hoist to one designed sync point per batch"),
+        Rule("LANNS004", "jnp-in-host-loop",
+             "jnp/jax op inside a host-side Python loop dispatches "
+             "per-iteration instead of batching"),
+        Rule("LANNS005", "dynamic-shape-arg",
+             "jit parameter used in a shape/axis position without being "
+             "declared in static_argnums/static_argnames"),
+        Rule("LANNS006", "unordered-iteration",
+             "set or unsorted-dict iteration feeding array/pytree "
+             "construction makes trace/layout order nondeterministic"),
+        # -- lock discipline -----------------------------------------------
+        Rule("LANNS010", "guarded-attr-unlocked",
+             "attribute declared in _GUARDED_BY touched outside `with "
+             "self.<lock>:`"),
+        Rule("LANNS011", "blocking-under-lock",
+             "blocking call (join/sleep/execute/query) while holding a "
+             "lock"),
+        Rule("LANNS012", "lock-order-inversion",
+             "nested lock acquisition contradicts the class _LOCK_ORDER"),
+        Rule("LANNS013", "publish-after-set",
+             "request result field assigned after event.set() — waiters "
+             "can observe a half-published result"),
+        # -- Pallas kernel constraints --------------------------------------
+        Rule("LANNS020", "kernel-f64",
+             "float64 dtype in a kernels/ module (TPU Pallas has no f64)"),
+        Rule("LANNS021", "dot-no-preferred-type",
+             "dot/dot_general in a kernel body without "
+             "preferred_element_type pins the MXU accumulator dtype"),
+        Rule("LANNS022", "kernel-1d-iota",
+             "1D iota/arange in a kernel body — Mosaic requires "
+             "broadcasted_iota (>= 2D)"),
+        Rule("LANNS023", "kernel-sort",
+             "sort/argsort/top_k in a kernel body — Mosaic cannot lower "
+             "them; use a compare/select network"),
+        Rule("LANNS024", "launcher-no-divisibility-guard",
+             "pallas_call launcher without a block-divisibility assert on "
+             "its padded operand shapes"),
+    )
+}
+
+
+@dataclass
+class Finding:
+    code: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+    justification: str = ""
+
+    def render(self) -> str:
+        tag = " (suppressed: %s)" % self.justification if self.suppressed \
+            else ""
+        return f"{self.path}:{self.line}: {self.code} {self.message}{tag}"
+
+
+@dataclass
+class Noqa:
+    codes: tuple[str, ...]
+    justification: str
+    used: bool = False
+
+
+@dataclass
+class SourceFile:
+    """A parsed module plus its ``# lanns:`` directive maps."""
+
+    path: str
+    text: str
+    tree: ast.AST
+    noqa: dict[int, Noqa] = field(default_factory=dict)
+    hotpath_lines: set[int] = field(default_factory=set)
+    holds: dict[int, str] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, path: str, text: str | None = None) -> "SourceFile":
+        if text is None:
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+        src = cls(path=path, text=text, tree=ast.parse(text, filename=path))
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            m = _DIRECTIVE_RE.search(line)
+            if not m:
+                continue
+            body = m.group("body")
+            nq = _NOQA_RE.match(body)
+            if nq:
+                codes = tuple(
+                    c.strip() for c in nq.group("codes").split(",")
+                    if c.strip()
+                )
+                src.noqa[lineno] = Noqa(codes, (nq.group("just") or "").strip())
+                continue
+            hl = _HOLDS_RE.match(body)
+            if hl:
+                src.holds[lineno] = hl.group("lock")
+                continue
+            if body == "hotpath":
+                src.hotpath_lines.add(lineno)
+        return src
+
+    # -- directive lookups -------------------------------------------------
+
+    def func_is_hot(self, node: ast.FunctionDef) -> bool:
+        """A def is hot-marked if the directive sits on the def line, on a
+        decorator line, or on the line directly above the def."""
+        lines = {node.lineno, node.lineno - 1}
+        lines.update(d.lineno for d in node.decorator_list)
+        if node.decorator_list:
+            lines.add(min(d.lineno for d in node.decorator_list) - 1)
+        return bool(lines & self.hotpath_lines)
+
+    def func_holds(self, node: ast.FunctionDef) -> str | None:
+        lines = [node.lineno, node.lineno - 1]
+        lines += [d.lineno for d in node.decorator_list]
+        for ln in lines:
+            if ln in self.holds:
+                return self.holds[ln]
+        return None
+
+    # -- suppression -------------------------------------------------------
+
+    def meta_findings(self) -> list[Finding]:
+        """LANNS000 for every noqa directive missing a justification."""
+        return [
+            Finding("LANNS000", self.path, ln,
+                    RULES["LANNS000"].summary)
+            for ln, nq in sorted(self.noqa.items())
+            if not nq.justification
+        ]
+
+    def apply_suppressions(self, findings: list[Finding]) -> list[Finding]:
+        """Mark findings suppressed where a justified noqa names their code
+        on the same line.  LANNS000 is never suppressible."""
+        for f in findings:
+            if f.code == "LANNS000":
+                continue
+            nq = self.noqa.get(f.line)
+            if nq and f.code in nq.codes and nq.justification:
+                f.suppressed = True
+                f.justification = nq.justification
+                nq.used = True
+        return findings
+
+
+def attr_chain(node: ast.AST) -> str:
+    """Dotted name for Name/Attribute chains ('jnp.asarray', 'self._cond');
+    '' for anything unresolvable."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""

@@ -1,0 +1,113 @@
+"""Retrace sentinel: assert zero recompiles on warmed serving paths.
+
+Wraps the jit compile-cache counters (``repro.common.utils.jit_cache_size``)
+of every jitted callable on the serving hot path — scan, HNSW beam, q8
+stage-1, rerank gather, merge — behind one snapshot/delta API, replacing
+the ad-hoc ``._cache_size()`` arithmetic the trace tests used to hand-roll.
+
+Usage (the ``retrace_sentinel`` pytest fixture in tests/conftest.py):
+
+    idx.warm_traces(...)
+    idx.query(warmup_workload)        # fill any best-effort residual traces
+    sentinel.reset()
+    idx.query(serving_workload)
+    sentinel.assert_no_retrace("mixed-knob serving")
+
+On jax builds without the private cache-size API ``available`` is False and
+the assertions pass vacuously (callers should skip instead if the counter
+is the point of the test).
+"""
+
+from __future__ import annotations
+
+from importlib import import_module
+
+from repro.common.utils import jit_cache_size
+
+# (module, attr) for every jitted callable a warmed serving path may hit.
+WATCHED_JITS: tuple[tuple[str, str], ...] = (
+    ("repro.core.hnsw", "beam_search"),
+    ("repro.core.hnsw", "beam_search_flat"),
+    ("repro.core.hnsw", "beam_search_stacked"),
+    ("repro.core.merge", "merge_topk"),
+    ("repro.core.merge", "merge_topk_scatter"),
+    ("repro.kernels.ref", "distance_topk_blocked"),
+    ("repro.kernels.ref", "distance_topk_q8_blocked"),
+    ("repro.kernels.ops", "distance_topk_jit"),
+    ("repro.quant.twostage", "_stage1_scores"),
+    ("repro.quant.rerank", "_rerank_gather_dev"),
+)
+
+
+def _resolve() -> dict[str, object]:
+    fns: dict[str, object] = {}
+    for mod, attr in WATCHED_JITS:
+        try:
+            fn = getattr(import_module(mod), attr)
+        except (ImportError, AttributeError):
+            continue
+        fns[f"{mod.rsplit('.', 1)[-1]}.{attr}"] = fn
+    return fns
+
+
+class RetraceSentinel:
+    """Snapshot/delta view over the watched jit compile caches."""
+
+    def __init__(self, extra: dict[str, object] | None = None) -> None:
+        self._fns = _resolve()
+        if extra:
+            self._fns.update(extra)
+        self._base: dict[str, int] = {}
+        self.reset()
+
+    @property
+    def available(self) -> bool:
+        """True if at least one watched fn exposes a real cache counter."""
+        return any(v >= 0 for v in self.snapshot().values())
+
+    def snapshot(self) -> dict[str, int]:
+        return {name: jit_cache_size(fn) for name, fn in self._fns.items()}
+
+    def reset(self) -> dict[str, int]:
+        self._base = self.snapshot()
+        return self._base
+
+    def deltas(self) -> dict[str, int]:
+        """New compiles per watched fn since reset(); unavailable counters
+        (-1) report 0."""
+        now = self.snapshot()
+        return {
+            name: max(now[name] - self._base.get(name, 0), 0)
+            if now[name] >= 0 and self._base.get(name, -1) >= 0 else 0
+            for name in now
+        }
+
+    def retraced(self) -> dict[str, int]:
+        return {k: v for k, v in self.deltas().items() if v > 0}
+
+    def assert_no_retrace(self, context: str = "") -> None:
+        hot = self.retraced()
+        if hot:
+            where = f" during {context}" if context else ""
+            raise AssertionError(
+                f"unexpected jit recompiles{where}: {hot} — a warmed "
+                "serving path must reuse existing traces"
+            )
+
+    # `with sentinel.expect_no_retrace("mixed-knob"):` asserts on exit
+    def expect_no_retrace(self, context: str = "") -> "_NoRetrace":
+        return _NoRetrace(self, context)
+
+
+class _NoRetrace:
+    def __init__(self, sentinel: RetraceSentinel, context: str) -> None:
+        self._s = sentinel
+        self._ctx = context
+
+    def __enter__(self) -> RetraceSentinel:
+        self._s.reset()
+        return self._s
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self._s.assert_no_retrace(self._ctx)

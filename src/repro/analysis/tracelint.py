@@ -1,0 +1,389 @@
+"""Trace-stability lint (LANNS001-006).
+
+Scope: functions marked ``# lanns: hotpath`` plus everything reachable from
+them through same-module calls (``foo(...)`` to a module-level def,
+``self.meth(...)`` to a method of the enclosing class).  Hot functions that
+are themselves jit-wrapped (or Pallas kernel bodies, detected by ``*_ref``
+parameters) run under trace, where Python loops unroll at compile time —
+LANNS001-004 do not apply inside them; LANNS005/006 still do.
+
+Device-value inference is a single forward pass per function: a name is
+"device-valued" after being assigned from a ``jnp.``/``jax.`` call, from a
+call to a known jitted callable, or from an expression over device values.
+``np.asarray(x)`` re-hosts it.  The tracking is deliberately local and
+conservative — it exists to catch the syncs that matter (hot loops, hot
+returns), not to be a type system.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .rules import Finding, SourceFile, attr_chain
+
+# jitted callables living in other modules: calls to these produce device
+# values even though the decorator is out of scope for a per-module pass.
+KNOWN_JITTED = {
+    "beam_search", "beam_search_flat", "beam_search_stacked",
+    "distance_topk", "distance_topk_q8", "distance_topk_jit",
+    "distance_topk_blocked", "distance_topk_q8_blocked",
+    "merge_topk", "_stage1_scores", "_rerank_gather_dev",
+}
+
+_HOST_CAST = {"float", "int", "bool"}
+_NP_SYNC = {"np.asarray", "np.array", "np.from_dlpack", "np.copy",
+            "numpy.asarray", "numpy.array", "numpy.from_dlpack"}
+_SHAPE_CTORS = {"zeros", "ones", "full", "empty", "arange", "linspace",
+                "eye", "broadcast_to", "tile", "repeat", "iota"}
+
+
+def _is_kernel_body(fn: ast.FunctionDef) -> bool:
+    return any(a.arg.endswith("_ref") for a in fn.args.args)
+
+
+def _jit_static_names(fn: ast.FunctionDef) -> tuple[bool, set[str]]:
+    """(is_jitted, static param names) from @jax.jit / @partial(jax.jit,...)
+    decorators."""
+    params = [a.arg for a in fn.args.args + fn.args.kwonlyargs]
+    for dec in fn.decorator_list:
+        chain = attr_chain(dec)
+        if chain in ("jax.jit", "jit"):
+            return True, set()
+        if isinstance(dec, ast.Call):
+            cchain = attr_chain(dec.func)
+            target = dec.args[0] if dec.args else None
+            is_partial_jit = (
+                cchain in ("partial", "functools.partial")
+                and target is not None
+                and attr_chain(target) in ("jax.jit", "jit")
+            )
+            if not (is_partial_jit or cchain in ("jax.jit", "jit")):
+                continue
+            static: set[str] = set()
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    for el in ast.walk(kw.value):
+                        if isinstance(el, ast.Constant) and \
+                                isinstance(el.value, str):
+                            static.add(el.value)
+                elif kw.arg == "static_argnums":
+                    for el in ast.walk(kw.value):
+                        if isinstance(el, ast.Constant) and \
+                                isinstance(el.value, int):
+                            if el.value < len(params):
+                                static.add(params[el.value])
+            return True, static
+    return False, set()
+
+
+class _FunctionIndex(ast.NodeVisitor):
+    """qualname -> def node, plus per-function metadata."""
+
+    def __init__(self) -> None:
+        self.funcs: dict[str, ast.FunctionDef] = {}
+        self._class: list[str] = []
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class.append(node.name)
+        self.generic_visit(node)
+        self._class.pop()
+
+    def _def(self, node: ast.FunctionDef) -> None:
+        qual = f"{self._class[-1]}.{node.name}" if self._class else node.name
+        self.funcs.setdefault(qual, node)
+        # nested defs are not independently indexed on purpose: they run as
+        # part of their parent and are walked with it.
+
+    visit_FunctionDef = _def
+    visit_AsyncFunctionDef = _def
+
+
+def _callees(qual: str, fn: ast.FunctionDef,
+             funcs: dict[str, ast.FunctionDef]) -> set[str]:
+    cls = qual.split(".")[0] if "." in qual else None
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func)
+        if chain in funcs:
+            out.add(chain)
+        elif cls and chain.startswith("self."):
+            meth = f"{cls}.{chain[5:]}"
+            if meth in funcs:
+                out.add(meth)
+    return out
+
+
+def hot_roster(src: SourceFile) -> dict[str, ast.FunctionDef]:
+    """Marked functions plus their same-module call closure."""
+    idx = _FunctionIndex()
+    idx.visit(src.tree)
+    seeds = [q for q, fn in idx.funcs.items() if src.func_is_hot(fn)]
+    seen: dict[str, ast.FunctionDef] = {}
+    work = list(seeds)
+    while work:
+        qual = work.pop()
+        if qual in seen:
+            continue
+        fn = idx.funcs[qual]
+        seen[qual] = fn
+        # Closure stops at jitted defs and kernel bodies: everything THEY
+        # call runs at trace time, not per-query on host, so host-sync
+        # rules don't apply beyond this boundary.
+        if _jit_static_names(fn)[0] or _is_kernel_body(fn):
+            continue
+        work.extend(_callees(qual, fn, idx.funcs))
+    return seen
+
+
+class _DeviceTracker(ast.NodeVisitor):
+    """Forward pass over one function; flags LANNS001-004 as it walks."""
+
+    def __init__(self, src: SourceFile, qual: str, traced: bool) -> None:
+        self.src = src
+        self.qual = qual
+        self.traced = traced  # jit-wrapped or kernel body: loops unroll
+        self.device: set[str] = set()
+        self.loop_depth = 0
+        self.findings: list[Finding] = []
+
+    # -- device-value expression test -------------------------------------
+
+    def is_device(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.device
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            root = chain.split(".")[0] if chain else ""
+            if root in ("jnp", "jax"):
+                return True
+            if chain in KNOWN_JITTED or chain.split(".")[-1] in KNOWN_JITTED:
+                return True
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "block_until_ready":
+                return self.is_device(node.func.value)
+            return False
+        if isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+            return self.is_device(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.is_device(node.left) or self.is_device(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_device(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.is_device(node.body) or self.is_device(node.orelse)
+        return False
+
+    def _bind(self, target: ast.AST, device: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.device.add if device else self.device.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind(el, device)
+
+    # -- statements --------------------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        dev = self.is_device(node.value)
+        for t in node.targets:
+            self._bind(t, dev)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.visit(node.value)
+        if self.is_device(node.value):
+            self._bind(node.target, True)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self.visit(node.value)
+            self._bind(node.target, self.is_device(node.value))
+
+    def _loop(self, node: ast.AST) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = _loop
+    visit_While = _loop
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        # nested def: walk it with the same tracker (closures run inline on
+        # the hot path often enough to deserve the same rules)
+        self.generic_visit(node)
+
+    # -- the rules ---------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        if self.traced:
+            return
+        chain = attr_chain(node.func)
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+                and not node.args:
+            self.findings.append(Finding(
+                "LANNS001", self.src.path, node.lineno,
+                f"`.item()` in hot function `{self.qual}` forces a "
+                "device->host sync",
+            ))
+        if isinstance(node.func, ast.Name) and node.func.id in _HOST_CAST \
+                and len(node.args) == 1 and self.is_device(node.args[0]):
+            self.findings.append(Finding(
+                "LANNS002", self.src.path, node.lineno,
+                f"`{node.func.id}()` of a device value in hot function "
+                f"`{self.qual}` blocks on the device",
+            ))
+        if chain in _NP_SYNC and node.args and self.is_device(node.args[0]):
+            where = "inside a host loop" if self.loop_depth else \
+                "in hot function"
+            self.findings.append(Finding(
+                "LANNS003", self.src.path, node.lineno,
+                f"`{chain}` of a device value {where} `{self.qual}` is a "
+                "host sync",
+            ))
+        root = chain.split(".")[0] if chain else ""
+        if self.loop_depth and root in ("jnp", "jax"):
+            self.findings.append(Finding(
+                "LANNS004", self.src.path, node.lineno,
+                f"`{chain}` inside a host-side loop in `{self.qual}` "
+                "dispatches per-iteration",
+            ))
+
+
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+
+
+def _names_outside_shape_attrs(expr: ast.AST) -> list[ast.Name]:
+    """Name nodes in expr, pruning `x.shape`/`x.dtype`-style subtrees: the
+    shape of a TRACED argument is static, so `jnp.ones(q.shape[0])` is
+    trace-stable even when `q` itself is not a static arg."""
+    out: list[ast.Name] = []
+
+    def walk(node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            return
+        if isinstance(node, ast.Name):
+            out.append(node)
+        for child in ast.iter_child_nodes(node):
+            walk(child)
+
+    walk(expr)
+    return out
+
+
+def _check_static_shapes(src: SourceFile, qual: str, fn: ast.FunctionDef,
+                         findings: list[Finding]) -> None:
+    """LANNS005 on a jit-wrapped def: non-static params in shape positions."""
+    jitted, static = _jit_static_names(fn)
+    if not jitted:
+        return
+    params = {a.arg for a in fn.args.args + fn.args.kwonlyargs} - static
+
+    def flag(name_node: ast.Name, what: str) -> None:
+        findings.append(Finding(
+            "LANNS005", src.path, name_node.lineno,
+            f"jit param `{name_node.id}` of `{qual}` used as {what} but not "
+            "in static_argnums/static_argnames — every distinct value "
+            "retraces",
+        ))
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            tail = chain.split(".")[-1] if chain else ""
+            shapeish = (
+                tail in _SHAPE_CTORS
+                and chain.split(".")[0] in ("jnp", "np", "jax", "lax")
+            ) or tail == "reshape" or (
+                isinstance(node.func, ast.Name) and node.func.id == "range"
+            )
+            if not shapeish:
+                continue
+            args = list(node.args) + [
+                kw.value for kw in node.keywords
+                if kw.arg in ("shape", "axis", "new_sizes")
+            ]
+            for a in args:
+                for el in _names_outside_shape_attrs(a):
+                    if el.id in params:
+                        flag(el, f"a shape argument of `{chain}`")
+        elif isinstance(node, ast.Slice):
+            for bound in (node.lower, node.upper, node.step):
+                if isinstance(bound, ast.Name) and bound.id in params:
+                    flag(bound, "a static slice bound")
+
+
+def _iter_is_unordered(it: ast.AST) -> str | None:
+    """Human tag if the iterable has nondeterministic / insertion order that
+    a sorted() wrapper would fix; None if it is fine."""
+    if isinstance(it, (ast.Set, ast.SetComp)):
+        return "a set"
+    if isinstance(it, ast.Call):
+        chain = attr_chain(it.func)
+        if chain == "set":
+            return "a set"
+        if isinstance(it.func, ast.Attribute) and \
+                it.func.attr in ("items", "keys", "values"):
+            return f"dict .{it.func.attr}()"
+    return None
+
+
+_ARRAY_FEED = {"asarray", "array", "stack", "concatenate", "vstack",
+               "hstack", "column_stack", "append", "full", "zeros", "ones"}
+
+
+def _feeds_arrays(body: list[ast.stmt]) -> bool:
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                chain = attr_chain(node.func)
+                tail = chain.split(".")[-1] if chain else ""
+                if tail in _ARRAY_FEED:
+                    return True
+    return False
+
+
+def _check_unordered_iteration(src: SourceFile, qual: str,
+                               fn: ast.FunctionDef,
+                               findings: list[Finding]) -> None:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.For):
+            tag = _iter_is_unordered(node.iter)
+            if tag and _feeds_arrays(node.body):
+                findings.append(Finding(
+                    "LANNS006", src.path, node.lineno,
+                    f"iteration over {tag} feeds array construction in "
+                    f"`{qual}` — wrap in sorted() for deterministic "
+                    "trace/layout order",
+                ))
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for comp in node.generators:
+                tag = _iter_is_unordered(comp.iter)
+                if tag and isinstance(node, (ast.ListComp, ast.GeneratorExp)):
+                    wrapped = ast.Expr(value=getattr(node, "elt", node))
+                    if _feeds_arrays([wrapped]):
+                        findings.append(Finding(
+                            "LANNS006", src.path, node.lineno,
+                            f"comprehension over {tag} feeds array "
+                            f"construction in `{qual}`",
+                        ))
+
+
+def run(src: SourceFile) -> list[Finding]:
+    findings: list[Finding] = []
+    hot = hot_roster(src)
+    for qual, fn in sorted(hot.items()):
+        traced = _jit_static_names(fn)[0] or _is_kernel_body(fn)
+        tracker = _DeviceTracker(src, qual, traced)
+        for stmt in fn.body:
+            tracker.visit(stmt)
+        findings.extend(tracker.findings)
+        _check_unordered_iteration(src, qual, fn, findings)
+    # LANNS005 applies to every jitted def, hot-marked or not: a retracing
+    # jit is a latency bug wherever it lives.
+    idx = _FunctionIndex()
+    idx.visit(src.tree)
+    for qual, fn in sorted(idx.funcs.items()):
+        _check_static_shapes(src, qual, fn, findings)
+    return findings

@@ -426,6 +426,7 @@ class FrozenHNSW:
             self._device_cache[key] = arrs
         return arrs
 
+    # lanns: hotpath
     def search(
         self,
         queries,
@@ -477,7 +478,7 @@ class FrozenHNSW:
             max_iters=max_iters,
             metric="l2" if cfg.metric == "l2" else "ip",
         )
-        d, i = np.asarray(d)[:B], np.asarray(i)[:B]
+        d, i = np.asarray(d)[:B], np.asarray(i)[:B]  # lanns: noqa[LANNS003] -- the single designed host sync of the beam batch
         if self.keys is not None:
             valid = i >= 0
             i = np.where(valid, self.keys[np.clip(i, 0, None)], -1)

@@ -154,7 +154,7 @@ def _batched_scan_topk(
         qp = np.zeros((B_pad, D), np.float32)
         qp[:B] = queries
     d, i = ops.distance_topk(qp, vectors, k, metric, n_valid=n_valid)
-    return np.asarray(d)[:B], np.asarray(i)[:B].astype(np.int64)
+    return np.asarray(d)[:B], np.asarray(i)[:B].astype(np.int64)  # lanns: noqa[LANNS003] -- the single designed host sync per routed scan batch
 
 
 class _Partition:
@@ -234,6 +234,7 @@ class _Partition:
                 self.vectors = pad[: self.size]
         return self._scan_pad
 
+    # lanns: hotpath
     def search(
         self,
         queries: np.ndarray,
@@ -596,6 +597,7 @@ class LannsIndex:
                         b *= 2
         return self
 
+    # lanns: hotpath
     def query(
         self,
         queries: np.ndarray,

@@ -321,7 +321,10 @@ class QueryPlanExecutor:
         blocks = []  # (s, g, pi, lane_start, count)
         q_blocks, off_blocks, ep_blocks = [], [], []
         T = 0
-        for (s, g), pi in stack["index"].items():
+        # sorted(): the stack index is built in (shard, segment) order, but
+        # lane layout must not DEPEND on dict insertion order — trace/layout
+        # determinism is load-bearing (LANNS006), not incidental.
+        for (s, g), pi in sorted(stack["index"].items()):
             sel = plan.sels[g]
             if len(sel) == 0:
                 continue
@@ -392,9 +395,9 @@ class QueryPlanExecutor:
             metric="l2" if hcfg.metric == "l2" else "ip",
         )
         # ONE host sync for all partitions (vs one np.asarray per (s, g))
-        d_all, i_all = np.asarray(d_all), np.asarray(i_all)
+        d_all, i_all = np.asarray(d_all), np.asarray(i_all)  # lanns: noqa[LANNS003] -- the single designed host sync of the fp32 beam batch
         keys_flat = stack["keys"]
-        for (s, g, pi, start, cnt) in blocks:
+        for (s, g, _pi, start, cnt) in blocks:
             sel = plan.sels[g]
             d = d_all[start: start + cnt]
             i = i_all[start: start + cnt].astype(np.int64)
@@ -454,7 +457,7 @@ class QueryPlanExecutor:
             max_iters=ef_eff + 2 * hcfg.M,
             metric=rmetric,
         )
-        i_all = np.asarray(i_all)  # quantized d_all is discarded: re-ranked
+        i_all = np.asarray(i_all)  # lanns: noqa[LANNS003] -- the single designed host sync of the q8 beam batch (quantized d_all is discarded: re-ranked)
         stores = stack["stores"]
         store_mode = stack["store_mode"]
         for (s, g, pi, start, cnt) in blocks:
@@ -544,6 +547,7 @@ class QueryPlanExecutor:
 
     # -- one homogeneous (single-knob) pass --------------------------------
 
+    # lanns: hotpath
     def execute(self, queries, topk, ef, hnsw_mode):
         """route -> candidates (-> rerank) -> merge for ONE knob group."""
         plan = self.plan(queries, topk, ef, hnsw_mode)

@@ -19,10 +19,10 @@ def recall_at_k(pred_ids: np.ndarray, true_ids: np.ndarray, k: int) -> float:
     hits = 0
     total = 0
     for p, t in zip(pred, true):
-        ts = set(int(x) for x in t if x >= 0)
+        ts = {int(x) for x in t if x >= 0}
         if not ts:
             continue
-        ps = set(int(x) for x in p if x >= 0)
+        ps = {int(x) for x in p if x >= 0}
         hits += len(ts & ps)
         total += len(ts)
     return hits / max(total, 1)

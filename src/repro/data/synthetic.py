@@ -60,7 +60,7 @@ def sift_like(n: int = 100_000, d: int = 128, n_queries: int = 1000, seed: int =
     centers); ~300 points/cluster so the top-100 neighborhood of a typical
     query sits inside one cluster, as at SIFT1M density."""
     nc = max(32, n // 300)
-    kw = dict(n_clusters=nc, center_seed=seed, spectrum_decay=1.0)
+    kw = {"n_clusters": nc, "center_seed": seed, "spectrum_decay": 1.0}
     corpus = clustered_vectors(n, d, seed=seed, **kw)
     queries = clustered_vectors(n_queries, d, seed=seed + 1, **kw)
     return corpus, queries

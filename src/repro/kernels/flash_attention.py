@@ -52,8 +52,6 @@ def _flash_fwd_kernel(
 
     q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
     k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
-    # skip fully-masked blocks (strictly above the causal diagonal)
-    run = (not causal) or True
 
     def compute():
         q = q_ref[0].astype(jnp.float32)
@@ -117,6 +115,9 @@ def flash_attention(
     BH, S, D = q.shape
     scale = scale or (1.0 / np.sqrt(D))
     S_pad = -(-S // max(block_q, block_k)) * max(block_q, block_k)
+    assert S_pad % block_q == 0 and S_pad % block_k == 0, (
+        "padded seq must tile both block sizes"
+    )
     if S_pad != S:
         pad = ((0, 0), (0, S_pad - S), (0, 0))
         q = jnp.pad(q, pad)

@@ -264,9 +264,10 @@ def apply(
     if "dense_blocks" in params:
         n_dense = cfg.n_dense_layers
         for l in range(n_dense):
-            bp = jax.tree.map(lambda a: a[l], params["dense_blocks"])
+            bp = jax.tree.map(lambda a, l=l: a[l], params["dense_blocks"])
             layer_cache = (
-                jax.tree.map(lambda a: a[l], cache) if cache is not None else None
+                jax.tree.map(lambda a, l=l: a[l], cache)
+                if cache is not None else None
             )
             x, new_c, aux = _block_apply(
                 cfg, bp, x, positions, layer_cache, cache_offset, ctx
@@ -274,7 +275,7 @@ def apply(
             aux_total += aux
             if cache is not None:
                 cache = jax.tree.map(
-                    lambda full, new: full.at[l].set(new), cache, new_c
+                    lambda full, new, l=l: full.at[l].set(new), cache, new_c
                 )
 
     # scanned stack

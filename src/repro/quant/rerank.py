@@ -101,6 +101,7 @@ def resolve_store_mode(rerank_store: str) -> str:
     return rerank_store
 
 
+# lanns: hotpath
 def exact_candidate_distances(
     q: np.ndarray,
     cand: np.ndarray,
@@ -129,7 +130,7 @@ def exact_candidate_distances(
         ex = _rerank_gather_dev(
             jnp.asarray(qp), jnp.asarray(cp), vecs, n2, metric
         )
-        return np.asarray(ex)[:b]
+        return np.asarray(ex)[:b]  # lanns: noqa[LANNS003] -- the rerank stage's one designed sync (device mode)
     v, n2 = store.vectors, store.norms2
     if b * C >= store.size:  # dense regime: one BLAS gemm beats b*C gathers
         full = exact_from_dots(q @ v.T, n2[None, :], metric)

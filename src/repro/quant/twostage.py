@@ -144,6 +144,7 @@ class QuantizedScanExecutor:
 
     # -- the full two-stage pass ------------------------------------------
 
+    # lanns: hotpath
     def run(self, queries, sels, slot, cand_d, cand_i, pstk, *,
             lane_width=None):
         """Search every quantized partition; returns the handled set.
@@ -172,7 +173,10 @@ class QuantizedScanExecutor:
         # phase A: async-dispatch every partition's stage-1 scores; XLA's
         # pool computes later partitions while the host handles earlier ones
         staged = []
-        for (s, g), part in self.parts.items():
+        # sorted(): dispatch order must not depend on dict insertion order —
+        # it fixes both the XLA dispatch sequence and the scatter order
+        # (LANNS006); parts is built sorted, so this is bit-identical.
+        for (s, g), part in sorted(self.parts.items()):
             sel = sels[g]
             b = len(sel)
             if b == 0 or part.n == 0:
@@ -184,7 +188,7 @@ class QuantizedScanExecutor:
                 qp = np.zeros((l_pad, q_eff.shape[1]), np.float32)
                 qp[:b] = q_lane
             fut = _stage1_scores(
-                jnp.asarray(qp), part.codes, part.scale_bias[metric_k],
+                jnp.asarray(qp), part.codes, part.scale_bias[metric_k],  # lanns: noqa[LANNS004] -- per-partition ASYNC dispatch is the point: uploads overlap stage-1 compute
                 mult, part.codes.shape[1] <= _EXACT_CAST_MAX_D,
             )
             staged.append(((s, g), part, sel, b, l_pad, q_lane, fut))
@@ -196,8 +200,8 @@ class QuantizedScanExecutor:
             # selection only reads it); accelerators need the device->host
             # copy — np.from_dlpack refuses non-CPU capsules.
             scores = (
-                np.from_dlpack(fut) if host_shares_memory
-                else np.asarray(fut)
+                np.from_dlpack(fut) if host_shares_memory  # lanns: noqa[LANNS003] -- per-partition sync AFTER async dispatch of all partitions; zero-copy on CPU
+                else np.asarray(fut)  # lanns: noqa[LANNS003] -- accelerator fallback of the same designed sync point
             )[:b]
             if C < scores.shape[1]:
                 # padding rows score +inf, so the C smallest are always

@@ -148,7 +148,7 @@ class CheckpointManager:
                     f"expected {len(leaves)}"
                 )
             new_leaves = []
-            for i, (meta, ref) in enumerate(zip(manifest["arrays"], leaves)):
+            for meta, ref in zip(manifest["arrays"], leaves):
                 a = z[meta["key"]]
                 if list(a.shape) != list(np.shape(ref)):
                     raise ValueError(

@@ -70,7 +70,7 @@ def replan_on_failure(placement: ShardPlacement, failed_hosts) -> ShardPlacement
     if not survivors:
         raise RuntimeError("no surviving hosts")
     load = {h: 0 for h in survivors}
-    for s, h in enumerate(placement.assignment):
+    for h in placement.assignment:
         if h in load:
             load[h] += 1
     new_assign = list(placement.assignment)

@@ -8,3 +8,19 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def retrace_sentinel():
+    """Snapshot of the serving-path jit compile caches (repro.analysis).
+
+    Usage: warm the traces, ``sentinel.reset()``, run the serving workload,
+    ``sentinel.assert_no_retrace(context)``.  Skips if this jax build hides
+    the cache counters — the assertion would be vacuous, not green.
+    """
+    from repro.analysis import RetraceSentinel
+
+    sentinel = RetraceSentinel()
+    if not sentinel.available:
+        pytest.skip("jit cache-size counters unavailable on this jax build")
+    return sentinel

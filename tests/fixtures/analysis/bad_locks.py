@@ -1,0 +1,41 @@
+"""Intentionally-broken fixture: trips LANNS010-013."""
+import threading
+import time
+
+
+class Worker:
+    _GUARDED_BY = {"stats": "_lock", "queue": "_lock"}
+    _LOCK_ORDER = ("_lock", "_stats_lock")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self.stats = {}
+        self.queue = []
+
+    def unguarded_touch(self):
+        self.stats["n"] = 1  # LANNS010: no lock held
+
+    def blocking_under_lock(self):
+        with self._lock:
+            time.sleep(0.1)  # LANNS011
+            return len(self.queue)
+
+    def inverted_order(self):
+        with self._stats_lock:
+            with self._lock:  # LANNS012: _lock ranks BEFORE _stats_lock
+                return len(self.queue)
+
+
+class Request:
+    _PUBLISHED_FIELDS = ("result", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.result = None
+        self.error = None
+
+
+def publish_racy(req, value):
+    req.event.set()
+    req.result = value  # LANNS013: assigned after the waiter may wake

@@ -1,0 +1,43 @@
+"""Intentionally-broken fixture: trips LANNS001-006 (one per function)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# lanns: hotpath
+def hot_item_sync(x):
+    total = jnp.sum(x)
+    return total.item()  # LANNS001
+
+
+# lanns: hotpath
+def hot_float_cast(x):
+    s = jnp.sum(x)
+    return float(s)  # LANNS002
+
+
+# lanns: hotpath
+def hot_asarray_sync(x):
+    d = jnp.sqrt(x)
+    return np.asarray(d)  # LANNS003
+
+
+# lanns: hotpath
+def hot_loop_dispatch(parts):
+    out = []
+    for p in parts:
+        out.append(jnp.sum(p))  # LANNS004
+    return out
+
+
+@jax.jit
+def jit_dynamic_shape(x, n):
+    return jnp.zeros((n, x.shape[1]))  # LANNS005: n not static
+
+
+# lanns: hotpath
+def hot_unordered_feed(parts):
+    rows = []
+    for key, val in parts.items():  # LANNS006: dict order feeds arrays
+        rows.append(np.asarray(val))
+    return np.stack(rows)

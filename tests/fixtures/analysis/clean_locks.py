@@ -1,0 +1,45 @@
+"""Clean twins of bad_locks.py: same shapes, no findings."""
+import threading
+
+
+class Worker:
+    _GUARDED_BY = {"stats": "_lock", "queue": "_lock"}
+    _LOCK_ORDER = ("_lock", "_stats_lock")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self.stats = {}
+        self.queue = []
+
+    def guarded_touch(self):
+        with self._lock:
+            self.stats["n"] = 1
+
+    def snapshot_then_block(self):
+        with self._lock:
+            n = len(self.queue)
+        return n  # lock released before anything slow runs
+
+    def declared_order(self):
+        with self._lock:
+            with self._stats_lock:  # matches _LOCK_ORDER
+                return len(self.queue)
+
+    # lanns: holds[_lock]
+    def _drain_locked(self):
+        self.queue.clear()  # caller holds _lock (see directive)
+
+
+class Request:
+    _PUBLISHED_FIELDS = ("result", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.result = None
+        self.error = None
+
+
+def publish_safe(req, value):
+    req.result = value  # publish BEFORE waking the waiter
+    req.event.set()

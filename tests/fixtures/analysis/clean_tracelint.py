@@ -1,0 +1,37 @@
+"""Clean twins of bad_tracelint.py: same shapes, no findings."""
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# lanns: hotpath
+def hot_no_sync(x):
+    total = jnp.sum(x)
+    return total  # stays on device: caller decides when to sync
+
+
+# lanns: hotpath
+def hot_host_cast(x):
+    s = np.sum(np.asarray(x, np.float32))  # host value in, host value out
+    return float(s)
+
+
+# lanns: hotpath
+def hot_batched_dispatch(parts):
+    stacked = jnp.stack(parts)  # ONE dispatch outside any loop
+    return jnp.sum(stacked, axis=0)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def jit_static_shape(x, n):
+    return jnp.zeros((n, x.shape[1]))  # n static: one trace per bucket
+
+
+# lanns: hotpath
+def hot_sorted_feed(parts):
+    rows = []
+    for key, val in sorted(parts.items()):  # deterministic order
+        rows.append(np.asarray(val))
+    return np.stack(rows)

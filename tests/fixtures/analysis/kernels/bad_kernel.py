@@ -1,0 +1,22 @@
+"""Intentionally-broken kernels fixture: trips LANNS020-024."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def bad_kernel(x_ref, o_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float64)  # LANNS020: f64 in a kernels module
+    idx = jnp.arange(block)  # LANNS022: arange in kernel body
+    order = jnp.argsort(x[:, 0])  # LANNS023: sort in kernel body
+    w = x @ x.T  # LANNS021: matmul without preferred_element_type
+    o_ref[...] = (w + idx[None, :] + order[None, :]).astype(jnp.float32)
+
+
+def bad_launcher(x, block=128):
+    # LANNS024: no divisibility assert before pallas_call
+    n = x.shape[0]
+    return pl.pallas_call(
+        lambda x_ref, o_ref: bad_kernel(x_ref, o_ref, block=block),
+        grid=(n // block,),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )(x)

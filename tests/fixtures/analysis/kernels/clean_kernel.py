@@ -1,0 +1,23 @@
+"""Clean twin of bad_kernel.py: same shapes, no findings."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def clean_kernel(x_ref, o_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)  # TPU-legal iota
+    w = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = w + idx.astype(jnp.float32)
+
+
+def clean_launcher(x, block=128):
+    n = x.shape[0]
+    assert n % block == 0, "corpus must tile the block size"
+    return pl.pallas_call(
+        lambda x_ref, o_ref: clean_kernel(x_ref, o_ref, block=block),
+        grid=(n // block,),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )(x)

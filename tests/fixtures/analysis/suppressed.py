@@ -1,0 +1,21 @@
+"""Suppression fixture: justified noqa suppresses, bare noqa is LANNS000."""
+import numpy as np
+import jax.numpy as jnp
+
+
+# lanns: hotpath
+def justified(x):
+    d = jnp.sqrt(x)
+    return np.asarray(d)  # lanns: noqa[LANNS003] -- test fixture: the designed sync
+
+
+# lanns: hotpath
+def unjustified(x):
+    d = jnp.sqrt(x)
+    return np.asarray(d)  # lanns: noqa[LANNS003]
+
+
+# lanns: hotpath
+def wrong_code(x):
+    d = jnp.sqrt(x)
+    return np.asarray(d)  # lanns: noqa[LANNS001] -- wrong code: does not match

@@ -121,6 +121,39 @@ def test_padding_is_result_transparent():
     assert np.array_equal(d0, d1) and np.array_equal(i0, i1)
 
 
+def test_hnsw_serving_zero_retrace_on_repeat_workload(hnsw_index,
+                                                      retrace_sentinel):
+    """HNSW warm_traces is best-effort (lane buckets depend on routing), so
+    the sentinel contract is run-identical-workload-twice: the second pass
+    over the same batch sizes must compile NOTHING — beam, merge or
+    otherwise."""
+    idx, queries = hnsw_index
+    sizes = (1, 3, 7, 13, 41, 80)
+    for B in sizes:
+        idx.query(queries[:B], 10)
+    with retrace_sentinel.expect_no_retrace("repeated hnsw workload"):
+        for B in sizes:
+            idx.query(queries[:B], 10)
+
+
+def test_q8_hnsw_serving_zero_retrace_on_repeat_workload(retrace_sentinel):
+    """Quantized beam + exact re-rank: the full q8 x hnsw serving pipeline
+    (stacked int8 beam, rerank gather, merge) reuses every trace on an
+    identical second pass."""
+    data = clustered_vectors(1500, 16, n_clusters=16, seed=9)
+    queries = clustered_vectors(48, 16, n_clusters=16, seed=10)
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                      engine="hnsw", hnsw_m=8, ef_construction=50,
+                      ef_search=50, quantized="q8")
+    idx = LannsIndex(cfg).build(data)
+    sizes = (1, 5, 17, 48)
+    for B in sizes:
+        idx.query(queries[:B], 10)
+    with retrace_sentinel.expect_no_retrace("repeated q8 hnsw workload"):
+        for B in sizes:
+            idx.query(queries[:B], 10)
+
+
 def test_stacked_standalone_matches_single():
     """beam_search_stacked over P copies == P independent beam_search runs."""
     data = clustered_vectors(500, 12, n_clusters=8, seed=7)

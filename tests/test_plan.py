@@ -180,6 +180,21 @@ def test_warm_traces_covers_knob_mix(world):
     assert s1["scan_traces"] == s0["scan_traces"]
 
 
+def test_mixed_knob_serving_zero_retrace(world, retrace_sentinel):
+    """The sentinel twin of the stats-counter test above, over EVERY watched
+    serving jit (scan, merge, rerank, ...) instead of just the scan kernel:
+    a warmed mixed-knob workload recompiles nothing."""
+    data, queries = world
+    idx = _index(data, "scan")
+    idx.warm_traces(8, 10, knobs=[(5, None), (20, 64)])
+    tk = np.array([5, 10, 20, 5, 10, 20, 5, 10])
+    for b in (1, 3, 8):  # warm pass fills any best-effort residual traces
+        idx.query(queries[:b], tk[:b])
+    with retrace_sentinel.expect_no_retrace("mixed-knob serving"):
+        for b in (1, 3, 8):
+            idx.query(queries[:b], tk[:b])
+
+
 def test_mixed_knobs_quantized_scan(world):
     data, queries = world
     idx = _index(data, "scan", quantized="q8")

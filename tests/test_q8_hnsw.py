@@ -23,10 +23,11 @@ D = 24
 
 
 def _cfg(**kw):
-    base = dict(
-        num_shards=1, num_segments=4, segmenter="apd", engine="hnsw",
-        hnsw_m=8, ef_construction=60, ef_search=80, alpha=0.15,
-    )
+    base = {
+        "num_shards": 1, "num_segments": 4, "segmenter": "apd",
+        "engine": "hnsw", "hnsw_m": 8, "ef_construction": 60,
+        "ef_search": 80, "alpha": 0.15,
+    }
     base.update(kw)
     return LannsConfig(**base)
 
@@ -86,7 +87,7 @@ def test_metrics_recall_parity(metric):
         rng = np.random.default_rng(1)
         data = data * rng.uniform(0.5, 2.0, (len(data), 1)).astype(np.float32)
     queries = clustered_vectors(40, 16, n_clusters=16, seed=1)
-    kw = dict(metric=metric)
+    kw = {"metric": metric}
     i_res = {}
     for quant in ("none", "q8"):
         idx = LannsIndex(_cfg(quantized=quant, **kw)).build(data)

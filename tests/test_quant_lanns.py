@@ -27,10 +27,11 @@ from repro.data.synthetic import clustered_vectors
 
 
 def _cfg(metric="l2", quantized="q8", **kw):
-    base = dict(
-        num_shards=1, num_segments=4, segmenter="apd", engine="scan",
-        alpha=0.15, metric=metric, quantized=quantized,
-    )
+    base = {
+        "num_shards": 1, "num_segments": 4, "segmenter": "apd",
+        "engine": "scan", "alpha": 0.15, "metric": metric,
+        "quantized": quantized,
+    }
     base.update(kw)
     return LannsConfig(**base)
 

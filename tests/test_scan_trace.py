@@ -96,3 +96,32 @@ def test_scan_trace_counter_in_stats(scan_index):
     idx, queries = scan_index
     _, _, stats = idx.query(queries[:8], 10, return_stats=True)
     assert stats["scan_traces"] != 0  # -1 (unavailable) or a real count
+
+
+def test_scan_serving_zero_retrace_after_warm(scan_index, retrace_sentinel):
+    """fp32 scan warm_traces is exhaustive over (batch bucket x corpus
+    bucket): after it, NO watched serving jit may recompile — not the scan
+    kernel, not the merge, nothing."""
+    idx, queries = scan_index
+    idx.warm_traces(len(queries), 10)
+    idx.query(queries[:5], 10)  # settle any non-scan residuals (merge path)
+    with retrace_sentinel.expect_no_retrace("warmed scan serving"):
+        for B in (1, 2, 5, 13, 41, 80):
+            idx.query(queries[:B], 10)
+
+
+def test_q8_scan_zero_retrace_on_repeat_workload(retrace_sentinel):
+    """q8 warm_traces is best-effort (stage-1 lane buckets depend on the
+    router), so the sentinel contract is run-the-identical-workload-twice:
+    the second pass must hit only cached traces."""
+    data = clustered_vectors(2500, 16, n_clusters=16, seed=4)
+    queries = clustered_vectors(64, 16, n_clusters=16, seed=5)
+    cfg = LannsConfig(num_shards=1, num_segments=4, segmenter="apd",
+                      engine="scan", alpha=0.15, quantized="q8")
+    idx = LannsIndex(cfg).build(data)
+    sizes = (1, 3, 11, 33, 64)
+    for B in sizes:  # first pass compiles whatever the workload needs
+        idx.query(queries[:B], 10)
+    with retrace_sentinel.expect_no_retrace("repeated q8 scan workload"):
+        for B in sizes:
+            idx.query(queries[:B], 10)
