@@ -15,9 +15,12 @@ committed ``benchmarks/baselines.json``:
   gated — they vary too much across runners to block merges; read them in
   the uploaded artifact.
 
-Improvements never fail.  A baseline metric missing from the current run
-fails loudly (schema drift is a regression of the harness itself); bench
-files without a baseline entry are reported as unchecked.
+Improvements never fail.  A GATED baseline metric missing from the current
+run fails loudly (schema drift is a regression of the harness itself);
+info-only metrics and info-only benches (e.g. the ``footprint`` report from
+``python -m repro.analysis --footprint-report``) are reported when absent
+but never fail — they carry no gate to drift from.  Bench files without a
+baseline entry are reported as unchecked.
 
 Refresh the committed baselines after an intentional perf change with::
 
@@ -47,9 +50,12 @@ ABSOLUTE_MARKERS = ("recall",)
 #: keys forced to info regardless of the markers above: bursty-arrival
 #: (MMPP) points depend on where the ON/OFF bursts land in a short smoke
 #: window — their achieved QPS swings ~2x run-to-run, far past any gate
-#: tolerance that would still catch real regressions.  They are reported
-#: (and land in the artifact rows) but never block a merge.
-INFO_MARKERS = ("mmpp",)
+#: tolerance that would still catch real regressions.  Closed-form
+#: footprint metrics (``repro.analysis --footprint-report``) are tracked
+#: the same way: byte-budget drift should be visible in the report, not
+#: block merges.  Both are reported (and land in the artifact rows) but
+#: never gate.
+INFO_MARKERS = ("mmpp", "footprint")
 
 
 def _kind(name: str) -> str:
@@ -93,9 +99,21 @@ def check(
     failures: list[str] = []
     lines: list[str] = []
     for bench, base in sorted(baselines.items()):
+        base_metrics = base.get("metrics", {})
+        gated = [k for k in base_metrics if _kind(k) != "info"]
         cur = current.get(bench)
         if cur is None:
-            failures.append(f"{bench}: no BENCH json produced for this bench")
+            if gated:
+                failures.append(
+                    f"{bench}: no BENCH json produced for this bench"
+                )
+            else:
+                # an info-only bench (e.g. footprint) skipped this run is
+                # reportable, not a gate failure — nothing it could gate
+                lines.append(
+                    f"{'info':10s} {bench}: no BENCH json this run "
+                    "(info-only bench, not gated)"
+                )
             continue
         if "smoke" in base and bool(cur.get("smoke")) != bool(base["smoke"]):
             # smoke and full runs use different corpus sizes/windows; gating
@@ -107,16 +125,24 @@ def check(
             )
             continue
         cur_metrics = cur.get("metrics", {})
-        for key, base_val in sorted(base.get("metrics", {}).items()):
+        for key, base_val in sorted(base_metrics.items()):
             if base_val is None:
                 continue
             kind = _kind(key)
             cur_val = cur_metrics.get(key)
             if cur_val is None:
-                failures.append(
-                    f"{bench}.{key}: metric missing from current run "
-                    f"(baseline {base_val:.4g})"
-                )
+                if kind == "info":
+                    # info metrics can't gate, so their absence can't be
+                    # schema drift worth failing on — surface and move on
+                    lines.append(
+                        f"{'info':10s} {bench}.{key}: missing from current "
+                        f"run (baseline {base_val:.4g}, not gated)"
+                    )
+                else:
+                    failures.append(
+                        f"{bench}.{key}: metric missing from current run "
+                        f"(baseline {base_val:.4g})"
+                    )
                 continue
             if kind == "relative":
                 floor = base_val * (1.0 - tolerance)
@@ -161,12 +187,17 @@ def update_baselines(current: dict[str, dict], baseline_path: str) -> dict:
         with open(baseline_path) as f:
             base = json.load(f)
     for bench, payload in sorted(current.items()):
+        metrics = {
+            k: v for k, v in payload.get("metrics", {}).items()
+            if v is not None
+        }
+        gated = {k: v for k, v in metrics.items() if _kind(k) != "info"}
+        # gated benches store gated keys only (info metrics are runner
+        # noise); an info-only bench (footprint) keeps its metrics so the
+        # report can show drift against the committed values
         base[bench] = {
             "smoke": payload.get("smoke", False),
-            "metrics": {
-                k: v for k, v in payload.get("metrics", {}).items()
-                if v is not None and _kind(k) != "info"
-            },
+            "metrics": gated if gated else metrics,
         }
     with open(baseline_path, "w") as f:
         json.dump(base, f, indent=2)
@@ -194,7 +225,11 @@ def main(argv=None) -> int:
     if not files:
         print("no BENCH_*.json files found", file=sys.stderr)
         return 2
-    current = load_bench_files(files)
+    try:
+        current = load_bench_files(files)
+    except (ValueError, OSError, json.JSONDecodeError) as e:
+        print(f"cannot load bench files: {e}", file=sys.stderr)
+        return 2
 
     if args.update:
         base = update_baselines(current, args.baseline)

@@ -8,9 +8,13 @@ Three coordinated passes (see analysis/README.md for the rule catalog):
   (LANNS010-013), with a runtime twin in ``runtime``
   (InstrumentedLock / race_stress);
 * ``kernelcheck``— Pallas/Mosaic constraint check over kernels/
-  (LANNS020-024).
+  (LANNS020-024);
+* ``scalecheck`` — symbolic shape/dtype abstract interpretation at
+  declared ``dims[...]`` bounds (LANNS030-034) plus the closed-form
+  device-footprint report.
 
-CLI: ``python -m repro.analysis [--strict] [paths...]`` and
+CLI: ``python -m repro.analysis [--strict] [paths...]``,
+``python -m repro.analysis --footprint-report OUT.json``, and
 ``python -m repro.analysis --race-stress --threads 8 --duration 30``.
 """
 
@@ -18,16 +22,18 @@ from __future__ import annotations
 
 import os
 
-from . import kernelcheck, locks, tracelint
+from . import kernelcheck, locks, scalecheck, tracelint
 from .rules import RULES, Finding, SourceFile
+from .scalecheck import DEFAULT_FOOTPRINT_DIMS, footprint_report
 from .sentinels import RetraceSentinel
 
 __all__ = [
     "RULES", "Finding", "SourceFile", "RetraceSentinel",
     "analyze_file", "analyze_paths",
+    "footprint_report", "DEFAULT_FOOTPRINT_DIMS",
 ]
 
-_PASSES = (tracelint.run, locks.run, kernelcheck.run)
+_PASSES = (tracelint.run, locks.run, kernelcheck.run, scalecheck.run)
 
 
 def analyze_file(path: str, text: str | None = None) -> list[Finding]:

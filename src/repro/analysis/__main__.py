@@ -5,6 +5,13 @@ package sources) with all three static passes and prints a per-rule
 summary including counted, justified suppressions.  ``--strict`` exits
 non-zero when any UNSUPPRESSED finding remains — the CI gate.
 
+``--footprint-report OUT.json`` writes the closed-form device/host
+resident-bytes model (per engine x quantized mode, at the declared dim
+bounds) in the BENCH_*.json schema so ``benchmarks/check_regression.py``
+can track it as an info-only metric.  ``--footprint-dims`` overrides the
+default 180M x 2048d bounds with the same ``name<=value`` grammar as the
+``dims[...]`` directive.
+
 ``--race-stress`` runs the seeded multi-submitter lifecycle churn with
 ``InstrumentedLock`` lock-order recording instead (the nightly CI job):
 exits non-zero on any lock-order cycle or guarded-attribute violation.
@@ -13,12 +20,16 @@ exits non-zero on any lock-order cycle or guarded-attribute violation.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+import time
 from collections import Counter
 
 from . import analyze_paths
 from .rules import RULES
+from .scalecheck import footprint_report
+from .symdims import fmt_bytes, parse_dims
 
 
 def _default_paths() -> list[str]:
@@ -46,6 +57,32 @@ def _lint(args: argparse.Namespace) -> int:
         for f in suppressed:
             print(f"  {f.path}:{f.line}: {f.code} -- {f.justification}")
     return 1 if active and (args.strict or args.exit_nonzero) else 0
+
+
+def _footprint(args: argparse.Namespace) -> int:
+    dims = parse_dims(args.footprint_dims, where="--footprint-dims") \
+        if args.footprint_dims else None
+    report = footprint_report(dims)
+    payload = {
+        # mirrors benchmarks.common.bench_payload (kept import-free so the
+        # analyzer works without the benchmarks package on sys.path)
+        "schema_version": 1,
+        "bench": "footprint",
+        "smoke": False,
+        "created_unix": time.time(),
+        "config": {"dims": report["dims"], "pad_model": report["pad_model"]},
+        "metrics": report["metrics"],
+        "rows": report["rows"],
+    }
+    with open(args.footprint_report, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    d = report["dims"]
+    print(f"footprint report ({', '.join(f'{k}={v:_}' for k, v in d.items())})"
+          f" -> {args.footprint_report}")
+    for key, val in sorted(report["metrics"].items()):
+        print(f"  {key}: {fmt_bytes(val)}")
+    return 0
 
 
 def _race_stress(args: argparse.Namespace) -> int:
@@ -76,6 +113,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="exit 1 if any unsuppressed finding remains")
     ap.add_argument("--exit-nonzero", action="store_true",
                     help=argparse.SUPPRESS)  # legacy alias for --strict
+    ap.add_argument("--footprint-report", metavar="OUT.json",
+                    help="write the closed-form resident-bytes report "
+                         "(BENCH schema) instead of linting")
+    ap.add_argument("--footprint-dims", metavar="DIMS",
+                    help="override footprint bounds, e.g. "
+                         "'n<=10_000_000, d<=512, P<=64, M<=16'")
     ap.add_argument("--race-stress", action="store_true",
                     help="run the seeded multi-submitter lock-order stress "
                          "instead of linting")
@@ -86,6 +129,8 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
     if args.race_stress:
         return _race_stress(args)
+    if args.footprint_report:
+        return _footprint(args)
     return _lint(args)
 
 

@@ -12,6 +12,15 @@ Directives are comments of the form ``# lanns: <directive>``:
 * ``# lanns: holds[_cond]`` — declares that the function defined on this
   line must only be called with ``self._cond`` held; the lock checker then
   treats guarded-attribute accesses inside it as covered.
+* ``# lanns: dims[n<=180_000_000, d<=2048]`` — declares symbolic dimension
+  bounds for the scale-safety pass (scalecheck).  On/above a def it scopes
+  to that function (merged over module-level declarations); anywhere else
+  it scopes to the whole module.  Any name bound in an annotated function
+  that MATCHES a declared dim is tracked at that bound.
+* ``# lanns: budget[device<=8GiB]`` — declares a device-resident byte
+  budget for the function defined on/below this line; scalecheck sums the
+  static footprint of its device allocations at the declared dim bounds
+  (LANNS034).
 """
 
 from __future__ import annotations
@@ -20,11 +29,15 @@ import ast
 import re
 from dataclasses import dataclass, field
 
+from .symdims import parse_budget, parse_dims
+
 _DIRECTIVE_RE = re.compile(r"#\s*lanns:\s*(?P<body>.+?)\s*$")
 _NOQA_RE = re.compile(
     r"noqa\[(?P<codes>[A-Z0-9,\s]+)\](?:\s*--\s*(?P<just>.+))?$"
 )
 _HOLDS_RE = re.compile(r"holds\[(?P<lock>\w+)\]$")
+_DIMS_RE = re.compile(r"dims\[(?P<body>[^\]]*)\]$")
+_BUDGET_RE = re.compile(r"budget\[(?P<body>[^\]]*)\]$")
 
 
 @dataclass(frozen=True)
@@ -84,6 +97,26 @@ RULES: dict[str, Rule] = {
         Rule("LANNS024", "launcher-no-divisibility-guard",
              "pallas_call launcher without a block-divisibility assert on "
              "its padded operand shapes"),
+        # -- scale safety (symbolic dims; scalecheck) ------------------------
+        Rule("LANNS030", "int32-range-overflow",
+             "index arithmetic provably exceeds the int32/uint32 value "
+             "range at the declared `dims[...]` bounds (silent wraparound "
+             "at scale)"),
+        Rule("LANNS031", "implicit-promotion",
+             "implicit dtype promotion on a hot path: fp64 leaking into "
+             "fp32 math, int64/fp64 silently narrowed at a jnp boundary "
+             "(x64 disabled), or int8 arithmetic outside an explicit "
+             "astype rescale"),
+        Rule("LANNS032", "mixed-width-store",
+             "int64 value stored into an int32-dtyped array slot without "
+             "an explicit bounds-asserted cast"),
+        Rule("LANNS033", "unbounded-trace-bucket",
+             "jit static/shape argument ranging over a declared symbolic "
+             "dim without pow2/quarter-pow2 bucketing — trace cardinality "
+             "is unbounded in the dim"),
+        Rule("LANNS034", "device-budget-exceeded",
+             "static device-resident footprint at the declared dim bounds "
+             "exceeds the `# lanns: budget[device<=...]` declaration"),
     )
 }
 
@@ -120,6 +153,8 @@ class SourceFile:
     noqa: dict[int, Noqa] = field(default_factory=dict)
     hotpath_lines: set[int] = field(default_factory=set)
     holds: dict[int, str] = field(default_factory=dict)
+    dims: dict[int, dict[str, int]] = field(default_factory=dict)
+    budget: dict[int, dict[str, int]] = field(default_factory=dict)
 
     @classmethod
     def parse(cls, path: str, text: str | None = None) -> "SourceFile":
@@ -144,20 +179,58 @@ class SourceFile:
             if hl:
                 src.holds[lineno] = hl.group("lock")
                 continue
+            dm = _DIMS_RE.match(body)
+            if dm:
+                src.dims[lineno] = parse_dims(
+                    dm.group("body"), where=f"{path}:{lineno}"
+                )
+                continue
+            bg = _BUDGET_RE.match(body)
+            if bg:
+                src.budget[lineno] = parse_budget(
+                    bg.group("body"), where=f"{path}:{lineno}"
+                )
+                continue
             if body == "hotpath":
                 src.hotpath_lines.add(lineno)
         return src
 
     # -- directive lookups -------------------------------------------------
 
-    def func_is_hot(self, node: ast.FunctionDef) -> bool:
-        """A def is hot-marked if the directive sits on the def line, on a
-        decorator line, or on the line directly above the def."""
+    def _anchor_lines(self, node: ast.FunctionDef) -> set[int]:
+        """Lines a function-scoped directive may sit on: the def line, the
+        line directly above, any decorator line, or the line above the
+        first decorator."""
         lines = {node.lineno, node.lineno - 1}
         lines.update(d.lineno for d in node.decorator_list)
         if node.decorator_list:
             lines.add(min(d.lineno for d in node.decorator_list) - 1)
-        return bool(lines & self.hotpath_lines)
+        return lines
+
+    def func_is_hot(self, node: ast.FunctionDef) -> bool:
+        """A def is hot-marked if the directive sits on the def line, on a
+        decorator line, or on the line directly above the def."""
+        return bool(self._anchor_lines(node) & self.hotpath_lines)
+
+    def func_dims(self, node: ast.FunctionDef) -> dict[str, int]:
+        """Function-scoped ``dims[...]`` declarations (unmerged)."""
+        out: dict[str, int] = {}
+        for ln in sorted(self._anchor_lines(node) & set(self.dims)):
+            out.update(self.dims[ln])
+        return out
+
+    def func_budget(self, node: ast.FunctionDef) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for ln in sorted(self._anchor_lines(node) & set(self.budget)):
+            out.update(self.budget[ln])
+        return out
+
+    def module_dims(self, claimed: set[int]) -> dict[str, int]:
+        """Module-scoped dims: every dims line not anchored to a def."""
+        out: dict[str, int] = {}
+        for ln in sorted(set(self.dims) - claimed):
+            out.update(self.dims[ln])
+        return out
 
     def func_holds(self, node: ast.FunctionDef) -> str | None:
         lines = [node.lineno, node.lineno - 1]

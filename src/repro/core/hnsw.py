@@ -426,8 +426,8 @@ class FrozenHNSW:
             self._device_cache[key] = arrs
         return arrs
 
-    # lanns: hotpath
-    def search(
+    # lanns: dims[B<=4096, k<=200, n<=33_554_432]
+    def search(  # lanns: hotpath
         self,
         queries,
         k: int,
@@ -469,7 +469,7 @@ class FrozenHNSW:
                 q = pad_to(q, B_pad)
                 valid = jnp.asarray(np.arange(B_pad) < B)
         arrs = self.device_arrays(n_pad, l_pad, cached=cached)
-        d, i = beam_search(
+        d, i = beam_search(  # lanns: noqa[LANNS033] -- k ranges over the finite per-request knob set (<= 200), not the corpus; bounded trace cardinality by the knob_groups contract
             arrs,
             jnp.asarray(q),
             valid,

@@ -49,6 +49,15 @@ from repro.core.segmenter import SegmenterConfig
 from repro.core.sharding import TwoLevelPartitioner
 from repro.kernels import ops
 
+# Scale-safety contract (repro.analysis.scalecheck): paper-scale bounds —
+# batches to 4096 queries, per-request topk <= 200, up to 4096 partitions
+# of up to 2^25 pow2-padded rows each.
+# lanns: dims[B<=4096, k<=200, P<=4096, n_pad<=33_554_432]
+
+#: flattened ids (partition row offsets, adjacency entries) live on an
+#: int32 device lattice; every `pi * n_pad + row` must stay below this
+_INT32_MAX = np.iinfo(np.int32).max
+
 
 @dataclasses.dataclass(frozen=True)
 class LannsConfig:
@@ -153,7 +162,7 @@ def _batched_scan_topk(
     if B_pad != B:
         qp = np.zeros((B_pad, D), np.float32)
         qp[:B] = queries
-    d, i = ops.distance_topk(qp, vectors, k, metric, n_valid=n_valid)
+    d, i = ops.distance_topk(qp, vectors, k, metric, n_valid=n_valid)  # lanns: noqa[LANNS033] -- k ranges over the finite per-request knob set (<= 200), capped by partition size; not corpus-dependent
     return np.asarray(d)[:B], np.asarray(i)[:B].astype(np.int64)  # lanns: noqa[LANNS003] -- the single designed host sync per routed scan batch
 
 
@@ -379,6 +388,14 @@ class LannsIndex:
             return self._stack[key]
         P = len(items)
         n_pad, l_pad = self._hnsw_pads(items)
+        if P * n_pad > _INT32_MAX:
+            # adjacency entries and beam lane offsets address the flat row
+            # space in int32 — past 2^31 rows the ids would silently wrap
+            raise OverflowError(
+                f"flat HNSW stack spans {P * n_pad} rows (P={P} x "
+                f"n_pad={n_pad}) — exceeds the int32 row lattice; shard "
+                "the index across hosts instead"
+            )
         dim = items[0][1].frozen.vectors.shape[1]
         m0 = items[0][1].frozen.adj0.shape[1]
         M = items[0][1].frozen.upper_adj.shape[2]

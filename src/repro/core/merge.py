@@ -169,6 +169,7 @@ def merge_topk_scatter(dists: jnp.ndarray, ids: jnp.ndarray, k: int):
     return out_d, out_i
 
 
+# lanns: dims[C<=16_384, k<=200]
 def merge_topk_vec(dists: np.ndarray, ids: np.ndarray, k: int):
     """Vectorized NumPy merge — semantics of ``merge_topk_np``, no Python loop.
 
@@ -222,6 +223,7 @@ def merge_topk_vec(dists: np.ndarray, ids: np.ndarray, k: int):
     return out_d.reshape(*lead, k), out_i.reshape(*lead, k)
 
 
+# lanns: dims[C<=16_384, k<=200]
 def merge_topk_disjoint_np(dists: np.ndarray, ids: np.ndarray, k: int):
     """Dedup-FREE top-k merge: one introselect + one partial sort per row.
 
@@ -272,6 +274,7 @@ def merge_topk_np(dists: np.ndarray, ids: np.ndarray, k: int):
     return out_d.reshape(*lead, k), out_i.reshape(*lead, k)
 
 
+# lanns: dims[S<=64, m<=64, B<=4096, c<=1024, topk<=200]
 def two_level_merge_np(
     seg_dists: np.ndarray,
     seg_ids: np.ndarray,

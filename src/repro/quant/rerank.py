@@ -101,8 +101,8 @@ def resolve_store_mode(rerank_store: str) -> str:
     return rerank_store
 
 
-# lanns: hotpath
-def exact_candidate_distances(
+# lanns: dims[b<=16_384, C<=1024, l_pad<=16_384]
+def exact_candidate_distances(  # lanns: hotpath
     q: np.ndarray,
     cand: np.ndarray,
     store: ExactStore,
@@ -127,8 +127,8 @@ def exact_candidate_distances(
             qp[:b] = q
             cp = np.zeros((l_pad, C), np.int32)
             cp[:b] = cand
-        ex = _rerank_gather_dev(
-            jnp.asarray(qp), jnp.asarray(cp), vecs, n2, metric
+        ex = _rerank_gather_dev(  # lanns: noqa[LANNS033] -- callers pad l_pad on the quarter-pow2 grid (plan.py / twostage.py contract); this function never invents lane counts
+            jnp.asarray(qp), jnp.asarray(cp), vecs, n2, metric  # lanns: noqa[LANNS033] -- same quarter-pow2 l_pad contract as the gather call above
         )
         return np.asarray(ex)[:b]  # lanns: noqa[LANNS003] -- the rerank stage's one designed sync (device mode)
     v, n2 = store.vectors, store.norms2

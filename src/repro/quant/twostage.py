@@ -84,7 +84,11 @@ def _stage1_scores(q, codes, scale_bias, mult, exact_cast):
 class _Q8Partition:
     """Device/host state for one quantized (shard, segment) partition."""
 
-    def __init__(self, qc: Q8Corpus, vectors: np.ndarray, keys, metric: str):
+    # Deployment envelope (repro.analysis.scalecheck): one segment of the
+    # paper's q8 deployment point — 10M rows (12.5M after the quarter-pow2
+    # pad) x 512d codes must fit a single 8 GiB device alongside headroom.
+    # lanns: dims[n_pad<=12_500_000, dim<=512]
+    def __init__(self, qc: Q8Corpus, vectors: np.ndarray, keys, metric: str):  # lanns: budget[device<=8GiB]
         self.n = qc.size
         # quarter-pow2 corpus buckets: stage-1 gemm cost and resident codes
         # scale with n_pad, so cap padding waste at 25% (vs up to 2x for

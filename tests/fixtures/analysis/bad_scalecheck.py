@@ -1,0 +1,45 @@
+"""Intentionally-bad scale/dtype snippets — one LANNS03x rule per block.
+
+Paired with clean_scalecheck.py (same shapes of code, bounds respected);
+tests/test_scalecheck.py asserts every rule fires here and none fire there.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# lanns: dims[P<=4096, n_pad<=33_554_432, n<=200_000_000, d<=2048, k<=200]
+
+
+# LANNS030: P * n_pad reaches 1.37e11 at the declared bounds — the int32
+# fill value wraps (the exact pre-fix core/plan.py bug shape).
+def bad_offsets(P, n_pad):  # lanns: hotpath
+    return np.full((P,), P * n_pad, np.int32)
+
+
+# LANNS031: np.zeros defaults to float64; multiplying the fp32 corpus by it
+# silently promotes the whole hot-path product to float64.
+def bad_promotion(x, d):  # lanns: hotpath
+    scale = np.zeros((d,))
+    return x.astype(np.float32) * scale
+
+
+# LANNS032: np.arange yields int64 rows; scattering them into an int32 slot
+# narrows values that reach n - 1 + n_pad > 2^31 at the declared bounds.
+def bad_store(n, n_pad):  # lanns: hotpath
+    out = np.zeros((16,), np.int32)
+    rows = np.arange(n) + n_pad
+    out[:] = rows[:16]
+    return out
+
+
+# LANNS033: a device buffer shaped by a raw declared dim — every distinct
+# corpus size compiles a fresh trace (no pow2/quarter-pow2 bucketing).
+def bad_buckets(q, n):  # lanns: hotpath
+    pad = jnp.zeros((n, 8), jnp.float32)
+    return pad
+
+
+# LANNS034: 33.5M x 2048 fp32 rows are 256 GiB resident — two orders over
+# the declared single-device budget.
+def bad_budget(n_pad, d):  # lanns: budget[device<=8GiB]
+    return jnp.zeros((n_pad, d), jnp.float32)

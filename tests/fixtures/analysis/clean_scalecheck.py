@@ -1,0 +1,47 @@
+"""Clean twin of bad_scalecheck.py — same code shapes, bounds respected."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.utils import next_pow2
+
+# lanns: dims[P<=4096, n_pad<=33_554_432, n<=200_000_000, d<=2048, k<=200]
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+# int64 offsets, plus the overflow guard that refines P * n_pad below the
+# int32 line for the branch that narrows.
+def clean_offsets(P, n_pad):  # lanns: hotpath
+    off = P * n_pad
+    if off > _INT32_MAX:
+        raise OverflowError(off)
+    return np.full((P,), off, np.int32)
+
+
+# explicit fp32 scales: no promotion anywhere on the product.
+def clean_promotion(x, d):  # lanns: hotpath
+    scale = np.zeros((d,), np.float32)
+    return x.astype(np.float32) * scale
+
+
+# rows stay int64 end to end — the slot is sized for the values it holds.
+def clean_store(n, n_pad):  # lanns: hotpath
+    out = np.zeros((16,), np.int64)
+    rows = np.arange(n) + n_pad
+    out[:] = rows[:16]
+    return out
+
+
+# the device buffer is shaped on the pow2 grid: trace count stays
+# logarithmic in the corpus size.
+def clean_buckets(q, n):  # lanns: hotpath
+    pad = jnp.zeros((next_pow2(n), 8), jnp.float32)
+    return pad
+
+
+# 12.5M x 512 int8 codes are ~6 GiB — inside the declared device budget.
+def clean_budget(q8_rows):  # lanns: budget[device<=8GiB]
+    m_pad = 12_500_000
+    dim = 512
+    return jnp.zeros((m_pad, dim), jnp.int8)

@@ -94,6 +94,47 @@ def test_info_metrics_not_gated():
     assert any("not gated" in ln for ln in lines)
 
 
+def test_missing_info_metric_reports_not_fails():
+    """An info metric absent from the run is drift worth showing, never a
+    gate failure — it had no gate to drift from."""
+    cur = {"online_qps": _payload(
+        {"qps_offline_b64": 1000.0}
+    )}
+    base = _baseline({
+        "qps_offline_b64": 1000.0,
+        "footprint_q8_scan_device_bytes": 5.4e9,
+    })
+    failures, lines = check(cur, base)
+    assert failures == []
+    assert any("footprint_q8_scan_device_bytes" in ln and "missing" in ln
+               for ln in lines)
+
+
+def test_info_only_bench_file_absent_not_fails():
+    """A baseline bench with only info metrics (the footprint report) whose
+    file didn't get produced this run must not fail the gate."""
+    base = _baseline(
+        {"footprint_q8_scan_device_bytes": 5.4e9}, bench="footprint"
+    )
+    failures, lines = check({}, base)
+    assert failures == []
+    assert any("footprint" in ln and "info-only" in ln for ln in lines)
+
+
+def test_footprint_metrics_classify_as_info():
+    """Footprint bytes must never gate even though they are stable: the
+    committed values move with deliberate dim/codec changes."""
+    cur = {"footprint": _payload(
+        {"footprint_fp32_scan_device_bytes": 2e12}, bench="footprint"
+    )}
+    base = _baseline(
+        {"footprint_fp32_scan_device_bytes": 1.0}, bench="footprint"
+    )  # 2e12 x drift: still info
+    failures, lines = check(cur, base)
+    assert failures == []
+    assert any("not gated" in ln for ln in lines)
+
+
 def test_newer_schema_rejected(tmp_path):
     path = tmp_path / "BENCH_x.json"
     payload = _payload({"qps_a": 1.0})
@@ -153,3 +194,35 @@ def test_main_no_files_is_usage_error(tmp_path, monkeypatch, capsys):
     monkeypatch.chdir(empty)
     assert main([]) == 2
     assert "no BENCH" in capsys.readouterr().err
+
+
+def test_main_unreadable_bench_file_is_usage_error(tmp_path, capsys):
+    """Malformed/newer-schema files exit 2 (usage), not a traceback."""
+    bad = tmp_path / "BENCH_x.json"
+    bad.write_text("{not json")
+    assert main([str(bad)]) == 2
+    assert "cannot load" in capsys.readouterr().err
+
+    newer = _payload({"qps_a": 1.0})
+    newer["schema_version"] = BENCH_SCHEMA_VERSION + 1
+    bad.write_text(json.dumps(newer))
+    assert main([str(bad)]) == 2
+    assert "schema_version" in capsys.readouterr().err
+
+
+def test_update_keeps_metrics_for_info_only_bench(tmp_path):
+    """--update must not hollow out the footprint baseline entry: with no
+    gated keys, the info metrics ARE the committed reference."""
+    cur = {
+        "footprint": _payload(
+            {"footprint_q8_scan_device_bytes": 5.4e9}, bench="footprint"
+        ),
+        "online_qps": _payload({"qps_offline_b64": 1.0, "p99_ms": 2.0}),
+    }
+    bpath = tmp_path / "baselines.json"
+    written = update_baselines(cur, str(bpath))
+    assert written["footprint"]["metrics"] == {
+        "footprint_q8_scan_device_bytes": 5.4e9
+    }
+    # gated benches still store gated keys only
+    assert written["online_qps"]["metrics"] == {"qps_offline_b64": 1.0}

@@ -70,6 +70,24 @@ def test_query_quantization_bound():
     assert np.all(np.abs(back - q * qc.scales[None, :]) <= q_scale[:, None] / 2 + 1e-7)
 
 
+def test_accumulator_dim_guard():
+    """Rows wider than Q8_ACCUM_MAX_D must be refused at ENCODE time: the
+    int8 dot's worst case d * 127^2 would wrap the int32 accumulator the
+    kernels (and q8_scores_np) contract on."""
+    from repro.quant.codec import Q8_ACCUM_MAX_D
+
+    assert Q8_ACCUM_MAX_D * 127 * 127 <= 2 ** 31 - 1
+    assert (Q8_ACCUM_MAX_D + 1) * 127 * 127 > 2 ** 31 - 1
+    wide = np.zeros((2, Q8_ACCUM_MAX_D + 1), np.float32)
+    with pytest.raises(ValueError, match="accumulator"):
+        quantize_q8(wide)
+    with pytest.raises(ValueError, match="accumulator"):
+        quantize_queries_q8(wide, np.ones((wide.shape[1],), np.float32))
+    # the widest legal dim encodes (and the reference scorer accepts it)
+    ok = quantize_q8(np.ones((2, 8), np.float32))
+    assert ok.codes.shape == (2, 8)
+
+
 def test_empty_corpus_codec():
     qc = quantize_q8(np.zeros((0, 8), np.float32))
     assert qc.size == 0 and qc.dim == 8

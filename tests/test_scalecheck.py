@@ -1,0 +1,343 @@
+"""repro.analysis.scalecheck: symbolic dim propagation, the LANNS030-034
+rules on their fixture twins, guard refinement, the footprint report, and
+the CLI surfaces that CI consumes.
+
+Snippet tests write one-function modules to tmp_path and run the full
+analyzer over them — the same entry point CI uses — so every assertion
+covers directive parsing, roster selection, and rule logic end to end.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    DEFAULT_FOOTPRINT_DIMS,
+    RULES,
+    analyze_file,
+    footprint_report,
+)
+from repro.analysis.symdims import (
+    Sym,
+    fmt_bytes,
+    next_pow2_bound,
+    parse_budget,
+    parse_dims,
+    quarter_pow2_bound,
+)
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+
+SCALE_RULES = ("LANNS030", "LANNS031", "LANNS032", "LANNS033", "LANNS034")
+
+
+def codes(findings, *, include_suppressed=False):
+    return sorted(
+        f.code for f in findings if include_suppressed or not f.suppressed
+    )
+
+
+def analyze_snippet(tmp_path, body: str):
+    p = tmp_path / "snippet.py"
+    p.write_text(body)
+    return analyze_file(str(p))
+
+
+# ---------------------------------------------------------------------------
+# fixture twins
+# ---------------------------------------------------------------------------
+
+
+def test_bad_scalecheck_trips_every_rule():
+    got = codes(analyze_file(str(FIXTURES / "bad_scalecheck.py")))
+    for code in SCALE_RULES:
+        assert code in got, (code, got)
+
+
+def test_clean_scalecheck_twin_is_silent():
+    assert codes(analyze_file(str(FIXTURES / "clean_scalecheck.py"))) == []
+
+
+def test_scale_rules_have_registry_entries():
+    for code in SCALE_RULES:
+        assert code in RULES
+    for f in analyze_file(str(FIXTURES / "bad_scalecheck.py")):
+        assert f.code in RULES, f.code
+
+
+def test_unannotated_module_is_skipped(tmp_path):
+    """No dims/budget directive -> the pass must not touch the file (the
+    whole repo minus the annotated hot modules takes this path)."""
+    findings = analyze_snippet(tmp_path, (
+        "import numpy as np\n"
+        "def f(n, d):  # lanns: hotpath\n"
+        "    return np.full((4,), n * d, np.int32)\n"
+    ))
+    assert not any(f.code in SCALE_RULES for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# symbolic interval algebra
+# ---------------------------------------------------------------------------
+
+
+def test_sym_product_bounds():
+    n = Sym("n", 180_000_000)
+    d = Sym("d", 2048)
+    p = n * d
+    assert p.hi == 180_000_000 * 2048 and p.lo == 0
+    assert "n" in p.expr and "d" in p.expr
+
+
+def test_sym_sub_and_neg_cross_bounds():
+    a, b = Sym("a", 10, 2), Sym("b", 7, 3)
+    s = a - b
+    assert (s.lo, s.hi) == (2 - 7, 10 - 3)
+    assert ((-a).lo, (-a).hi) == (-10, -2)
+
+
+def test_sym_floordiv_conservative_on_zero_divisor():
+    total = Sym("t", 1000, 0)
+    c = Sym("c", 10, 0)  # lo == 0: division can't tighten anything
+    q = total // c
+    assert q.hi >= 1000 and q.lo <= -1000 or (q.lo, q.hi) == (-1000, 1000)
+    safe = total // Sym("k", 10, 2)
+    assert safe.hi == 500 and safe.lo == 0
+
+
+def test_sym_mod_bounded_by_divisor():
+    m = Sym("x", 10 ** 12) % Sym("m", 128, 1)
+    assert m.hi == 127 and m.lo == 0
+
+
+def test_sym_hull_and_clamp():
+    h = Sym("a", 10, 5).hull(Sym("b", 20, 1))
+    assert (h.lo, h.hi) == (1, 20)
+    c = Sym("a", 10, 5).clamp_hi(7)
+    assert (c.lo, c.hi) == (5, 7)
+
+
+def test_bucket_bounds_cover_real_pads():
+    from repro.common.utils import next_pow2, next_pow2_quarter
+
+    for v in (1, 2, 3, 7, 100, 1000, 12_345_678):
+        assert next_pow2(v) <= next_pow2_bound(Sym("x", v, v)).hi
+        assert next_pow2_quarter(v) <= quarter_pow2_bound(Sym("x", v, v)).hi
+
+
+def test_parse_dims_and_budget_grammar():
+    assert parse_dims("n<=180_000_000, d <= 2048") == {
+        "n": 180_000_000, "d": 2048,
+    }
+    assert parse_budget("device<=8GiB") == {"device": 8 * 2 ** 30}
+    assert parse_budget("host<=1.5GB") == {"host": 1_500_000_000}
+    with pytest.raises(ValueError, match="malformed"):
+        parse_dims("n=10")
+    with pytest.raises(ValueError, match="malformed"):
+        parse_budget("device<=8XiB")
+    assert fmt_bytes(8 * 2 ** 30) == "8GiB"
+
+
+# ---------------------------------------------------------------------------
+# propagation through numpy shape/index arithmetic (end to end)
+# ---------------------------------------------------------------------------
+
+_HDR = (
+    "import numpy as np\n"
+    "# lanns: dims[n<=200_000_000, d<=2048, P<=4096, "
+    "n_pad<=33_554_432, C<=1024]\n"
+)
+
+
+def scale_codes(tmp_path, body):
+    return [f.code for f in analyze_snippet(tmp_path, _HDR + body)
+            if f.code in SCALE_RULES and not f.suppressed]
+
+
+def test_product_overflow_fires(tmp_path):
+    got = scale_codes(tmp_path, (
+        "def f(n, d):  # lanns: hotpath\n"
+        "    return np.full((4,), n * d, np.int32)\n"
+    ))
+    assert got == ["LANNS030"]
+
+
+def test_assert_guard_refines_product(tmp_path):
+    got = scale_codes(tmp_path, (
+        "def f(n, d):  # lanns: hotpath\n"
+        "    total = n * d\n"
+        "    assert total <= 2_000_000_000\n"
+        "    return np.full((4,), total, np.int32)\n"
+    ))
+    assert got == []
+
+
+def test_raise_guard_refines_product(tmp_path):
+    got = scale_codes(tmp_path, (
+        "def f(P, n_pad):  # lanns: hotpath\n"
+        "    off = P * n_pad\n"
+        "    if off > 2_147_483_647:\n"
+        "        raise OverflowError(off)\n"
+        "    return np.full((4,), off, np.int32)\n"
+    ))
+    assert got == []
+
+
+def test_cumsum_range_is_total_times_magnitude(tmp_path):
+    got = scale_codes(tmp_path, (
+        "def f(n):  # lanns: hotpath\n"
+        "    counts = np.full((n,), 32, np.int32)\n"
+        "    return np.cumsum(counts)\n"
+    ))
+    assert got == ["LANNS030"]
+    # int64 accumulation is the fix — and must satisfy the checker
+    got = scale_codes(tmp_path, (
+        "def f(n):  # lanns: hotpath\n"
+        "    counts = np.full((n,), 32, np.int32)\n"
+        "    return np.cumsum(counts.astype(np.int64))\n"
+    ))
+    assert got == []
+
+
+def test_reshape_wildcard_infers_total(tmp_path):
+    got = scale_codes(tmp_path, (
+        "def f(n, d):  # lanns: hotpath\n"
+        "    y = np.zeros((n, d), np.int8)\n"
+        "    flat = y.reshape(-1)\n"
+        "    return np.full((2,), flat.size, np.int32)\n"
+    ))
+    assert got == ["LANNS030"]
+
+
+def test_broadcast_to_propagates_shape(tmp_path):
+    got = scale_codes(tmp_path, (
+        "def f(x, P, n_pad):  # lanns: hotpath\n"
+        "    y = np.broadcast_to(x, (P, n_pad))\n"
+        "    return np.full((2,), y.size, np.int32)\n"
+    ))
+    assert got == ["LANNS030"]
+
+
+def test_int64_store_into_int32_slot_fires(tmp_path):
+    got = scale_codes(tmp_path, (
+        "def f(n, n_pad):  # lanns: hotpath\n"
+        "    out = np.zeros((16,), np.int32)\n"
+        "    out[:] = np.arange(n) + n_pad\n"
+        "    return out\n"
+    ))
+    assert "LANNS032" in got
+
+
+def test_conservatism_unknown_values_never_flag(tmp_path):
+    """Anything the interpreter can't bound must stay silent — the
+    contract that makes repo-wide --strict viable."""
+    got = scale_codes(tmp_path, (
+        "def helper(x):\n"
+        "    return x\n"
+        "def f(n, q):  # lanns: hotpath\n"
+        "    m = helper(n)\n"
+        "    return np.full((4,), m, np.int32)\n"
+    ))
+    assert got == []
+
+
+# ---------------------------------------------------------------------------
+# the footprint report
+# ---------------------------------------------------------------------------
+
+MODES = ("fp32_scan", "q8_scan", "fp32_hnsw", "q8_hnsw")
+
+
+def test_footprint_covers_every_mode_and_placement():
+    rep = footprint_report()
+    assert rep["dims"] == DEFAULT_FOOTPRINT_DIMS
+    for mode in MODES:
+        for placement in ("device", "host"):
+            key = f"footprint_{mode}_{placement}_bytes"
+            assert key in rep["metrics"], key
+            assert rep["metrics"][key] > 0
+    # per-component rows carry the auditable closed forms and sum exactly
+    # to the per-(mode, placement) metrics
+    for r in rep["rows"]:
+        assert r["formula"] and r["bytes"] > 0
+    for mode in MODES:
+        for placement in ("device", "host"):
+            total = sum(
+                r["bytes"] for r in rep["rows"]
+                if r["mode"] == mode and r["placement"] == placement
+            )
+            assert total == \
+                rep["metrics"][f"footprint_{mode}_{placement}_bytes"]
+
+
+def test_footprint_quantization_saves_device_bytes():
+    m = footprint_report()["metrics"]
+    assert m["footprint_q8_scan_device_bytes"] < \
+        m["footprint_fp32_scan_device_bytes"] / 3
+    assert m["footprint_q8_hnsw_device_bytes"] < \
+        m["footprint_fp32_hnsw_device_bytes"]
+
+
+def test_footprint_scales_with_dims():
+    small = footprint_report({"n": 10_000_000, "d": 512, "P": 64, "M": 16})
+    big = footprint_report()
+    for key in small["metrics"]:
+        assert small["metrics"][key] < big["metrics"][key]
+    # q8@10M x 512d — the committed-artifact deployment point — fits a
+    # single 8 GiB device per the ROADMAP byte budget
+    assert small["metrics"]["footprint_q8_scan_device_bytes"] < 8 * 2 ** 30
+
+
+# ---------------------------------------------------------------------------
+# CLI (the CI gate surfaces)
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True,
+    )
+
+
+def test_cli_strict_fires_on_bad_fixture():
+    r = _cli("--strict", str(FIXTURES / "bad_scalecheck.py"))
+    assert r.returncode == 1, r.stdout + r.stderr
+    for code in SCALE_RULES:
+        assert code in r.stdout, code
+
+
+def test_cli_strict_zero_on_clean_twin():
+    r = _cli("--strict", str(FIXTURES / "clean_scalecheck.py"))
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_repo_stays_scale_clean():
+    """The annotated hot modules must hold their declared envelopes with
+    every remaining violation justified (acceptance criterion)."""
+    r = _cli("--strict")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_footprint_report_round_trips(tmp_path):
+    out = tmp_path / "BENCH_footprint.json"
+    r = _cli("--footprint-report", str(out),
+             "--footprint-dims", "n<=10_000_000, d<=512, P<=64, M<=16")
+    assert r.returncode == 0, r.stdout + r.stderr
+    payload = json.loads(out.read_text())
+    assert payload["schema_version"] == 1
+    assert payload["bench"] == "footprint"
+    assert payload["smoke"] is False
+    assert payload["config"]["dims"]["n"] == 10_000_000
+    for mode in MODES:
+        assert f"footprint_{mode}_device_bytes" in payload["metrics"]
+    assert all(r["formula"] for r in payload["rows"])
+
+
+def test_cli_footprint_rejects_malformed_dims(tmp_path):
+    out = tmp_path / "x.json"
+    r = _cli("--footprint-report", str(out), "--footprint-dims", "n=10")
+    assert r.returncode != 0
