@@ -15,11 +15,19 @@ Emits the usual CSV rows plus ``BENCH_latency_load.json`` (schema in
 ``benchmarks/common.py``): per-point QPS, p50/p95/p99, formed-batch
 histogram, and the headline ``saturation_qps`` metric that CI's regression
 gate watches.  ``--smoke`` shrinks corpus and windows for the CI wiring leg.
+
+Every point runs with a shared ``repro.obs.Telemetry``, so the per-stage
+(queue/route/candidates/rerank/merge) decomposition of the half-load point
+is printed as a table and exported three ways: info-gated metrics in
+``BENCH_stage_breakdown.json``, the full Prometheus text exposition in
+``BENCH_stage_breakdown.prom``, and the bounded span log in
+``BENCH_stage_breakdown.jsonl``.
 """
 
 from __future__ import annotations
 
 import argparse
+import math
 
 from benchmarks.common import (
     bench_payload,
@@ -28,6 +36,7 @@ from benchmarks.common import (
     write_bench_json,
 )
 from repro.core import LannsConfig, LannsIndex
+from repro.obs import Telemetry, format_stage_table
 from repro.serve.loadgen import (
     LoadResult,
     measure_saturation_qps,
@@ -59,6 +68,7 @@ def run(
     max_wait_ms: float = 2.0,
     load_fracs=(0.25, 0.5, 0.75, 0.9, 1.1),
     out: str = "BENCH_latency_load.json",
+    stage_out: str = "BENCH_stage_breakdown.json",
     smoke: bool = False,
     seed: int = 0,
 ):
@@ -68,8 +78,10 @@ def run(
         alpha=0.15,
     )
     idx = LannsIndex(cfg).build(corpus)
+    tel = Telemetry()
     kw = {
         "topk": topk, "max_batch": max_batch, "max_wait_ms": max_wait_ms,
+        "telemetry": tel,
     }
     # pre-compile the full serving trace set (every pow2 batch bucket x
     # corpus bucket) so no timed window pays an XLA compile — first-traffic
@@ -146,6 +158,37 @@ def run(
         smoke=smoke,
     )
     write_bench_json(out, payload)
+
+    # --- telemetry exports: the half-load point's per-stage decomposition
+    # as its own (info-gated) bench payload, plus the raw Prometheus text
+    # exposition and the span JSONL for offline drill-down.
+    print("stage breakdown @ half load "
+          f"(poisson, {half.offered_qps:.0f} qps offered):")
+    print(format_stage_table(half.stage_breakdown))
+    stage_metrics = {
+        f"stage_{st}_{k}": v
+        for st, pct in half.stage_breakdown.items()
+        for k, v in pct.items()
+        if isinstance(v, (int, float)) and math.isfinite(v)
+    }
+    stage_payload = bench_payload(
+        "stage_breakdown",
+        config=dict(  # noqa: C408
+            n=n, d=d, topk=topk, duration_s=duration_s,
+            max_batch=max_batch, offered_qps=half.offered_qps,
+            process=half.process,
+        ),
+        metrics=stage_metrics,
+        rows=[half.row()],
+        smoke=smoke,
+    )
+    write_bench_json(stage_out, stage_payload)
+    base = stage_out[:-5] if stage_out.endswith(".json") else stage_out
+    with open(base + ".prom", "w") as fh:
+        fh.write(tel.registry.expose_text())
+    n_spans = tel.spans.dump_jsonl(base + ".jsonl")
+    print(f"telemetry: {base}.prom + {base}.jsonl ({n_spans} spans, "
+          f"{tel.spans.dropped} dropped)")
     return payload
 
 

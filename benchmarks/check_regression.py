@@ -53,9 +53,11 @@ ABSOLUTE_MARKERS = ("recall",)
 #: tolerance that would still catch real regressions.  Closed-form
 #: footprint metrics (``repro.analysis --footprint-report``) are tracked
 #: the same way: byte-budget drift should be visible in the report, not
-#: block merges.  Both are reported (and land in the artifact rows) but
-#: never gate.
-INFO_MARKERS = ("mmpp", "footprint")
+#: block merges.  Per-stage telemetry percentiles (``stage_*`` from
+#: BENCH_stage_breakdown.json) are wall-clock on shared runners — tracked
+#: for drift, never gating.  All are reported (and land in the artifact
+#: rows) but never gate.
+INFO_MARKERS = ("mmpp", "footprint", "stage_")
 
 
 def _kind(name: str) -> str:

@@ -317,6 +317,21 @@ class LannsIndex:
         self._stack: dict[bool, Optional[dict]] = {}
         self._q8_exec = None  # lazily-built two-stage quantized executor
         self._exec = QueryPlanExecutor(self)  # the staged query executor
+        # optional obs.Telemetry bundle; None (default) = untimed serving
+        self.telemetry = None
+
+    def attach_telemetry(self, telemetry) -> "LannsIndex":
+        """Attach (or, with None, detach) an ``obs.Telemetry`` bundle.
+
+        Attached, the staged executor times its route/candidates/rerank/
+        merge boundaries into the bundle's registry and span sink, labeled
+        by engine/quantized/merge_path/pow2 batch bucket.  Detached — the
+        default — the executor reads no clock at all, so results are
+        bit-identical either way (asserted in tests/test_obs.py) and the
+        off path carries zero overhead.
+        """
+        self.telemetry = telemetry
+        return self
 
     # -- stacked HNSW serving state -------------------------------------------
 

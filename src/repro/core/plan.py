@@ -220,6 +220,12 @@ class QueryPlan:
     cand_i: np.ndarray
     handled: set = dataclasses.field(default_factory=set)
     merge_path: str = ""
+    # telemetry (index.telemetry attached): the exact-re-rank share of the
+    # candidates stage, accumulated by both q8 paths, and the final
+    # route/candidates/rerank/merge wall-clock split.  Both stay at their
+    # defaults when telemetry is detached — no clock is read at all.
+    rerank_s: float = 0.0
+    stage_s: Optional[dict] = None
 
 
 class QueryPlanExecutor:
@@ -285,10 +291,15 @@ class QueryPlanExecutor:
             else:
                 plan.handled |= self._candidates_hnsw_fp32(plan)
         if cfg.quantized == "q8" and cfg.engine == "scan":
+            tel = getattr(index, "telemetry", None)
+            acc = None if tel is None else [0.0]
             plan.handled |= index._q8_executor().run(
                 plan.queries, plan.sels, plan.slot, plan.cand_d,
                 plan.cand_i, plan.pstk, lane_width=plan.lane_width,
+                rerank_s=acc, clock=None if tel is None else tel.clock,
             )
+            if acc is not None:
+                plan.rerank_s += acc[0]
         n_pad = l_pad = None
         if plan.hnsw_mode == "partition":
             n_pad, l_pad = index._hnsw_pads()
@@ -474,6 +485,7 @@ class QueryPlanExecutor:
         i_all = np.asarray(i_all)  # lanns: noqa[LANNS003] -- the single designed host sync of the q8 beam batch (quantized d_all is discarded: re-ranked)
         stores = stack["stores"]
         store_mode = stack["store_mode"]
+        tel = getattr(index, "telemetry", None)
         for (s, g, pi, start, cnt) in blocks:
             sel = plan.sels[g]
             store = stores[pi]
@@ -485,10 +497,13 @@ class QueryPlanExecutor:
             cand = np.clip(
                 rows.astype(np.int64) - pi * n_pad, 0, store.size - 1
             ).astype(np.int32)
+            t_rr = None if tel is None else tel.clock()
             ex = exact_candidate_distances(
                 q_eff[sel], cand, store, rmetric,
                 mode=store_mode, l_pad=next_pow2_quarter(cnt),
             )
+            if t_rr is not None:
+                plan.rerank_s += tel.clock() - t_rr
             ex = np.where(invalid, np.inf, ex)
             kk = min(pstk, C)
             if kk < C:
@@ -566,8 +581,41 @@ class QueryPlanExecutor:
 
     # lanns: hotpath
     def execute(self, queries, topk, ef, hnsw_mode):
-        """route -> candidates (-> rerank) -> merge for ONE knob group."""
+        """route -> candidates (-> rerank) -> merge for ONE knob group.
+
+        With ``index.telemetry`` attached (an ``obs.Telemetry``), the stage
+        boundaries are timed and reported through ``telemetry.on_execute``
+        (labeled by engine/quantized/merge_path/pow2 batch bucket) and the
+        plan carries ``stage_s``; the exact-re-rank share accumulated by
+        the q8 paths is subtracted out of the candidates stage.  Detached
+        (the default), the untimed branch below runs — no clock reads, no
+        telemetry calls — so instrumentation-off results are structurally
+        bit-identical to -on (asserted in tests/test_obs.py).
+        """
+        tel = getattr(self.index, "telemetry", None)
+        if tel is None:
+            plan = self.plan(queries, topk, ef, hnsw_mode)
+            self.candidates(plan)
+            out_d, out_i = self.merge(plan)
+            return out_d, out_i, plan
+        clock = tel.clock
+        t0 = clock()
         plan = self.plan(queries, topk, ef, hnsw_mode)
+        t1 = clock()
         self.candidates(plan)
+        t2 = clock()
         out_d, out_i = self.merge(plan)
+        t3 = clock()
+        plan.stage_s = {
+            "route": t1 - t0,
+            "candidates": max((t2 - t1) - plan.rerank_s, 0.0),
+            "rerank": plan.rerank_s,
+            "merge": t3 - t2,
+        }
+        cfg = self.index.config
+        tel.on_execute(
+            engine=cfg.engine, quantized=cfg.quantized,
+            merge_path=plan.merge_path, batch=queries.shape[0],
+            stage_s=plan.stage_s,
+        )
         return out_d, out_i, plan

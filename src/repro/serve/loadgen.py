@@ -133,13 +133,25 @@ class LoadResult:
     achieved_qps: float
     mean_batch: float
     batch_hist: dict[int, int]
+    mean_exec_ms: float = float("nan")  # execution share (latency - queue)
+    # per-stage percentiles from telemetry spans — {} without telemetry;
+    # {stage: {p50_ms, p95_ms, p99_ms, mean_ms, n}} with (see
+    # repro.obs.spans.stage_breakdown).
+    stage_breakdown: dict = dataclasses.field(default_factory=dict)
 
     def row(self) -> dict:
         """Strict-JSON-ready dict: batch_hist keys stringified, non-finite
         floats (closed-loop offered_qps, empty-percentile NaNs) -> null."""
+
+        def _clean(v):
+            if isinstance(v, float) and not math.isfinite(v):
+                return None
+            if isinstance(v, dict):
+                return {k: _clean(x) for k, x in v.items()}
+            return v
+
         out = {
-            k: (None if isinstance(v, float) and not math.isfinite(v) else v)
-            for k, v in dataclasses.asdict(self).items()
+            k: _clean(v) for k, v in dataclasses.asdict(self).items()
         }
         out["batch_hist"] = {str(k): v for k, v in sorted(
             self.batch_hist.items()
@@ -155,6 +167,8 @@ def _summarize(
     concurrency: int,
     duration_s: float,
     elapsed_s: float,
+    telemetry=None,
+    span_since: int = 0,
 ) -> LoadResult:
     done = [r for r in fe.completed if r.done]
     lat = np.array([r.latency_s for r in done], np.float64)
@@ -163,6 +177,16 @@ def _summarize(
     pct = (
         np.percentile(lat, (50, 95, 99)) if has else np.full(3, np.nan)
     )
+    breakdown: dict = {}
+    if telemetry is not None:
+        # only this load point's executor spans: the sink is shared across
+        # points, so filter by the seq watermark taken before submission.
+        from repro.obs.spans import stage_breakdown
+
+        plan_events = telemetry.spans.events(kind="plan", since=span_since)
+        breakdown = stage_breakdown(
+            plan_events, extra={"queue": queue.tolist()}
+        )
     return LoadResult(
         process=process,
         offered_qps=float(offered_qps),
@@ -181,6 +205,10 @@ def _summarize(
         achieved_qps=len(done) / max(elapsed_s, 1e-12),
         mean_batch=fe.mean_batch_size,
         batch_hist=dict(fe.batch_hist),
+        mean_exec_ms=(
+            1e3 * float((lat - queue).mean()) if has else float("nan")
+        ),
+        stage_breakdown=breakdown,
     )
 
 
@@ -199,6 +227,7 @@ def run_load_point(
     ef: Optional[int] = None,
     collect_stats: bool = False,
     knob_mix: Optional[Sequence[tuple]] = None,
+    telemetry=None,
 ) -> LoadResult:
     """Drive one offered-load point end to end and summarize it.
 
@@ -212,13 +241,25 @@ def run_load_point(
     that arrivals cycle through deterministically — arrival j carries
     ``knob_mix[j % len(knob_mix)]``, so the workload is reproducible and
     every formed micro-batch exercises the executor's knob-group path.
+
+    ``telemetry`` (a ``repro.obs.Telemetry``) instruments the point: it is
+    attached to ``index`` for the duration (previous attachment restored on
+    exit), wired into the frontend, and the result gains a per-stage
+    ``stage_breakdown`` computed from the executor spans this point
+    produced (isolated via the span-sink seq watermark, so one shared
+    telemetry can serve a whole sweep).
     """
     if process not in PROCESSES:
         raise ValueError(f"process={process!r} — expected one of {PROCESSES}")
     fe = AsyncAnnFrontend(
         index, topk=topk, max_batch=max_batch, max_wait_ms=max_wait_ms,
-        ef=ef, collect_stats=collect_stats,
+        ef=ef, collect_stats=collect_stats, telemetry=telemetry,
     )
+    span_since = 0
+    prev_telemetry = getattr(index, "telemetry", None)
+    if telemetry is not None:
+        span_since = telemetry.spans.next_seq
+        index.attach_telemetry(telemetry)
     n_pool = len(queries)
 
     def _submit(j: int):
@@ -273,6 +314,8 @@ def run_load_point(
                     time.sleep(min(t_next - now, 2e-3))
     finally:
         fe.stop(drain=True)
+        if telemetry is not None:
+            index.attach_telemetry(prev_telemetry)
     elapsed = time.perf_counter() - t0
     return _summarize(
         fe,
@@ -281,6 +324,8 @@ def run_load_point(
         concurrency=concurrency,
         duration_s=duration_s,
         elapsed_s=elapsed,
+        telemetry=telemetry,
+        span_since=span_since,
     )
 
 

@@ -398,3 +398,67 @@ def test_run_load_point_mmpp_with_knob_mix(index_and_queries):
     assert res.process == "mmpp" and res.offered_qps == 300.0
     assert res.completed > 0 and res.completed == res.submitted
     assert sum(b * c for b, c in res.batch_hist.items()) == res.completed
+
+
+# ---------------------------------------------------------------------------
+# telemetry: queue-delay decomposition + per-stage breakdown under load
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("process", ["poisson", "fixed", "mmpp"])
+def test_queue_decomposition_accounts_for_latency(index_and_queries, process):
+    """Per request, the t_submit/t_start/t_done timestamps decompose exactly:
+    queue delay + execution time == end-to-end latency (all three read the
+    same monotonic clock, so the identity is algebraic, not approximate)."""
+    idx, queries = index_and_queries
+    fe = AsyncAnnFrontend(idx, topk=5, max_batch=8, max_wait_ms=2.0)
+    gaps = arrival_gaps(process, 300.0, 64, seed=7)
+    fe.start()
+    try:
+        reqs = []
+        for j, g in enumerate(gaps[:40]):
+            time.sleep(min(g, 5e-3))
+            reqs.append(fe.submit(queries[j % len(queries)]))
+    finally:
+        fe.stop(drain=True)
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        exec_s = r.t_done - r.t_start
+        assert exec_s >= 0.0 and r.queue_s >= 0.0
+        assert r.queue_s + exec_s == pytest.approx(r.latency_s, abs=1e-9)
+
+
+def test_run_load_point_stage_breakdown(index_and_queries):
+    """With a Telemetry attached, the load point reports per-stage
+    percentiles covering the whole pipeline, and the queue + exec means
+    re-compose the end-to-end mean."""
+    from repro.obs import STAGES, Telemetry
+
+    idx, queries = index_and_queries
+    tel = Telemetry()
+    res = run_load_point(
+        idx, queries, process="poisson", rate_qps=300.0, duration_s=0.3,
+        topk=5, max_batch=8, max_wait_ms=2.0, seed=9, telemetry=tel,
+    )
+    assert idx.telemetry is None  # restored after the point
+    assert res.completed > 0
+    assert set(STAGES) <= set(res.stage_breakdown)
+    for st in STAGES:
+        pct = res.stage_breakdown[st]
+        assert pct["n"] > 0
+        assert 0.0 <= pct["p50_ms"] <= pct["p95_ms"] <= pct["p99_ms"]
+    # decomposition: mean latency == mean queue + mean exec (same requests)
+    assert res.mean_queue_ms + res.mean_exec_ms == pytest.approx(
+        res.mean_ms, rel=1e-6
+    )
+    # the breakdown's queue row is the same per-request queue population
+    assert res.stage_breakdown["queue"]["n"] == res.completed
+    # and the spans/metrics made it to the shared sinks
+    assert len(tel.spans) > 0
+    assert "lanns_stage_seconds" in tel.registry.expose_text()
+    # without telemetry the result shape degrades gracefully
+    res0 = run_load_point(
+        idx, queries, process="poisson", rate_qps=300.0, duration_s=0.1,
+        topk=5, max_batch=8, max_wait_ms=2.0, seed=9,
+    )
+    assert res0.stage_breakdown == {}
