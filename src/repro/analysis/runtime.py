@@ -178,12 +178,31 @@ def instrument_frontend(fe, registry: LockOrderRegistry):
     return violations
 
 
+def instrument_controller(ctrl, registry: LockOrderRegistry):
+    """Same treatment for an (unstarted) ``SLOController``: its ``_lock``
+    condition becomes instrumented (named ``ctrl_lock`` so the held-before
+    graph separates it from the frontend's ``_cond``) and its ``stats``
+    dict asserts the lock on every mutation.  Must run before
+    ``ctrl.start()`` AND before the bound frontend ``start()``s — both
+    threads must only ever see the instrumented lock."""
+    if getattr(ctrl, "_thread", None) is not None:
+        raise RuntimeError("instrument before start(): the controller "
+                           "thread must only ever see the instrumented lock")
+    inner = InstrumentedLock("ctrl_lock", registry)
+    ctrl._lock = threading.Condition(inner)
+    stats = GuardedDict(ctrl.stats, inner, "ctrl.stats")
+    ctrl.stats = stats
+    return stats.violations
+
+
 @dataclass
 class StressReport:
     cycles_run: int = 0
     submitted: int = 0
     completed: int = 0
     cancelled: int = 0
+    retunes: int = 0
+    degraded: int = 0
     lock_edges: dict = field(default_factory=dict)
     lock_cycles: list = field(default_factory=list)
     violations: list = field(default_factory=list)
@@ -196,7 +215,8 @@ class StressReport:
         lines = [
             f"race-stress: {self.cycles_run} lifecycle cycles, "
             f"{self.submitted} submitted, {self.completed} completed, "
-            f"{self.cancelled} cancelled",
+            f"{self.cancelled} cancelled, {self.retunes} controller ticks, "
+            f"{self.degraded} deadline degrades",
             f"lock-order edges observed: "
             f"{sorted(self.lock_edges) or '(none)'}",
         ]
@@ -235,17 +255,25 @@ def _check_invariants(fe, report: StressReport) -> None:
 
 def race_stress(threads: int = 8, duration_s: float = 30.0, seed: int = 0,
                 index=None, progress=None) -> StressReport:
-    """Seeded submit/stop/drain churn over an instrumented frontend.
+    """Seeded submit/stop/drain churn over an instrumented frontend
+    + bound SLO controller.
 
-    Each lifecycle cycle builds a fresh ``AsyncAnnFrontend`` over a shared
-    small index, instruments it, runs ``threads`` seeded submitters for a
-    slice of the budget, then stops it — alternating drain=True/False — and
-    checks counter invariants plus request publication integrity.  Lock
-    orders accumulate in one registry across all cycles.
+    Each lifecycle cycle builds a fresh ``AsyncAnnFrontend`` with a bound
+    ``SLOController`` over a shared small index, instruments both, runs
+    ``threads`` seeded submitters (some requests carrying tight
+    ``deadline_ms`` budgets, so the degrade path runs concurrently with
+    submission) for a slice of the budget, churns the controller thread
+    mid-slice (stop / manual retune / live ``fe.retune`` / restart), then
+    stops everything — alternating drain=True/False AND controller-stop
+    before/after frontend-stop — and checks counter invariants plus
+    request publication integrity.  Lock orders accumulate in one registry
+    across all cycles.
     """
     import numpy as np
 
     from repro.data.synthetic import clustered_vectors
+    from repro.obs.telemetry import Telemetry
+    from repro.serve.controller import SLOController
     from repro.serve.engine import AsyncAnnFrontend
 
     if index is None:
@@ -259,13 +287,19 @@ def race_stress(threads: int = 8, duration_s: float = 30.0, seed: int = 0,
 
     registry = LockOrderRegistry()
     report = StressReport()
+    telemetry = Telemetry()  # shared: the span ring is bounded by design
     deadline = time.monotonic() + duration_s
     cycle = 0
     while time.monotonic() < deadline:
         drain = cycle % 2 == 0
-        fe = AsyncAnnFrontend(index, topk=10, max_batch=8, max_wait_ms=1.0)
+        ctrl = SLOController(slo_ms=3.0, ef_ladder=(12, 6),
+                             interval_s=0.01, min_wait_ms=0.05)
+        fe = AsyncAnnFrontend(index, topk=10, max_batch=8, max_wait_ms=1.0,
+                              telemetry=telemetry, controller=ctrl)
         violations = instrument_frontend(fe, registry)
+        ctrl_violations = instrument_controller(ctrl, registry)
         fe.start()
+        ctrl.start()
         stop_flag = threading.Event()
         counts = [0] * threads
 
@@ -274,8 +308,15 @@ def race_stress(threads: int = 8, duration_s: float = 30.0, seed: int = 0,
             rng = np.random.default_rng(seed * 1000 + cycle * 100 + tid)
             while not stop_flag.is_set():
                 q = queries[rng.integers(len(queries))]
+                # half the requests carry a budget; 0.5 ms is already blown
+                # at formation, so degrades happen under live churn
+                ddl = (
+                    float(rng.choice([0.5, 3.0, 20.0]))
+                    if rng.random() < 0.5 else None
+                )
                 try:
-                    req = fe.submit(q, topk=int(rng.choice([5, 10])))
+                    req = fe.submit(q, topk=int(rng.choice([5, 10])),
+                                    deadline_ms=ddl)
                 except RuntimeError:
                     return  # frontend stopping/stopped: expected during churn
                 counts[tid] += 1
@@ -289,9 +330,21 @@ def race_stress(threads: int = 8, duration_s: float = 30.0, seed: int = 0,
         for w in workers:
             w.start()
         slice_s = min(1.0, max(0.2, deadline - time.monotonic()))
-        time.sleep(slice_s)
+        time.sleep(slice_s / 2)
+        # controller churn under live traffic: thread restart, a manual
+        # tick while it is down, and an operator-style live retune
+        ctrl.stop()
+        ctrl.retune_once()
+        fe.retune(max_wait_ms=0.8)
+        ctrl.start()
+        time.sleep(slice_s / 2)
         stop_flag.set()
-        completed = fe.stop(drain=drain)
+        if cycle % 2 == 0:  # alternate controller-stop vs frontend-stop order
+            ctrl.stop()
+            completed = fe.stop(drain=drain)
+        else:
+            completed = fe.stop(drain=drain)
+            ctrl.stop()
         for w in workers:
             w.join(timeout=10.0)
             if w.is_alive():
@@ -299,11 +352,15 @@ def race_stress(threads: int = 8, duration_s: float = 30.0, seed: int = 0,
         if fe.error is not None:
             report.violations.append(f"batcher died: {fe.error!r}")
         _check_invariants(fe, report)
+        snap = ctrl.snapshot()
         report.cycles_run += 1
         report.submitted += sum(counts)
         report.completed += len(completed)
         report.cancelled += sum(counts) - len(completed)
+        report.retunes += snap["ticks"]
+        report.degraded += snap["degraded"]
         report.violations.extend(violations)
+        report.violations.extend(ctrl_violations)
         if progress is not None:
             progress(report)
         cycle += 1

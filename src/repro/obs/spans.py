@@ -15,7 +15,11 @@ event kinds flow through it in this repo:
   ``AnnFrontend._execute``);
 * ``retrace`` — a watched jit recompiled (from ``RetraceSentinel`` deltas,
   polled on every batch) — the event an operator alerts on, because a
-  warmed serving path must reuse existing traces.
+  warmed serving path must reuse existing traces;
+* ``controller`` — one per SLO-controller retune tick: the decision
+  (tighten/relax/hold), the knob values applied, and the worst-latency /
+  queue-depth signals the decision saw (from
+  ``serve.controller.SLOController`` via ``Telemetry.on_retune``).
 
 Export surface: ``to_jsonl()`` / ``dump_jsonl(path)`` — one JSON object
 per line, the load-sweep artifact format (``BENCH_stage_breakdown.jsonl``).

@@ -22,6 +22,7 @@ introduce a lock cycle with the serving locks.
 
 from __future__ import annotations
 
+import math
 import time
 from typing import Callable, Optional
 
@@ -99,6 +100,28 @@ class Telemetry:
             "Watched jit recompiles observed on serving traffic",
             ("fn",),
         )
+        # SLO-controller decision metrics (serve/controller.py): the policy
+        # is itself observable, so a controller A/B can be judged from one
+        # exposition — degrades by ladder rung, retune ticks by decision,
+        # and the knob values the controller last applied/saw.
+        self.controller_degraded = reg.counter(
+            "lanns_controller_degraded_total",
+            "Requests served with a deadline-degraded ef, by ladder ef",
+            ("ef",),
+        )
+        self.controller_retunes = reg.counter(
+            "lanns_controller_retunes_total",
+            "Controller retune ticks, by decision",
+            ("action",),
+        )
+        self.controller_max_wait_ms = reg.gauge(
+            "lanns_controller_max_wait_ms",
+            "Frontend max_wait_ms as last set by the controller",
+        )
+        self.controller_max_batch = reg.gauge(
+            "lanns_controller_max_batch",
+            "Frontend max_batch as last observed by the controller",
+        )
 
     # -- pipeline hooks ----------------------------------------------------
 
@@ -145,6 +168,32 @@ class Telemetry:
             queue_max_s=float(queue.max()),
         )
         self.poll_retraces()
+
+    def on_degrade(self, ef: int, n: int = 1) -> None:
+        """``n`` requests in a formed batch degraded to ladder rung ``ef``
+        (called by ``SLOController.on_batch_formed`` on the batcher
+        thread; one labeled counter bump, no span — the batch span that
+        follows carries the batch context)."""
+        self.controller_degraded.labels(str(int(ef))).inc(int(n))
+
+    def on_retune(self, *, action: str, max_wait_ms: float, max_batch: int,
+                  worst_ms: float, depth: int) -> None:
+        """One controller tick: decision counter, knob gauges, and a
+        ``controller`` span with the signal values the decision saw
+        (``worst_ms`` is None in the span when the tick's window held no
+        batch events)."""
+        self.controller_retunes.labels(str(action)).inc()
+        self.controller_max_wait_ms.set(float(max_wait_ms))
+        self.controller_max_batch.set(float(max_batch))
+        worst = float(worst_ms)
+        self.spans.emit(
+            "controller",
+            action=str(action),
+            max_wait_ms=float(max_wait_ms),
+            max_batch=int(max_batch),
+            worst_ms=worst if math.isfinite(worst) else None,
+            depth=int(depth),
+        )
 
     def poll_retraces(self) -> dict:
         """Fold the sentinel's deltas into the retrace counter + events.

@@ -2,11 +2,13 @@
 micro-batching front ends (sync + threaded async), and arrival-process load
 generation for p99-vs-load sweeps."""
 
+from repro.serve.controller import SLOController
 from repro.serve.engine import AnnFrontend, AnnRequest, AsyncAnnFrontend
 from repro.serve.loadgen import (
     LoadResult,
     arrival_gaps,
     measure_saturation_qps,
+    run_controller_ab,
     run_load_point,
     sweep_load,
 )
@@ -16,8 +18,10 @@ __all__ = [
     "AnnRequest",
     "AsyncAnnFrontend",
     "LoadResult",
+    "SLOController",
     "arrival_gaps",
     "measure_saturation_qps",
+    "run_controller_ab",
     "run_load_point",
     "sweep_load",
 ]

@@ -44,6 +44,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.serve.controller import SLOController
 from repro.serve.engine import AsyncAnnFrontend
 
 PROCESSES = ("poisson", "fixed", "mmpp", "closed")
@@ -138,6 +139,16 @@ class LoadResult:
     # {stage: {p50_ms, p95_ms, p99_ms, mean_ms, n}} with (see
     # repro.obs.spans.stage_breakdown).
     stage_breakdown: dict = dataclasses.field(default_factory=dict)
+    # SLO accounting (populated when the point ran with slo_ms set):
+    # attainment is the fraction of completed requests within slo_ms,
+    # degraded counts requests the controller served with a reduced ef.
+    slo_ms: float = float("nan")
+    slo_attainment: float = float("nan")
+    degraded: int = 0
+    controller_on: bool = False
+    # mean recall@topk vs a ground-truth id table (open-loop points with
+    # gt_ids only; nan otherwise)
+    mean_recall: float = float("nan")
 
     def row(self) -> dict:
         """Strict-JSON-ready dict: batch_hist keys stringified, non-finite
@@ -169,11 +180,29 @@ def _summarize(
     elapsed_s: float,
     telemetry=None,
     span_since: int = 0,
+    slo_ms: Optional[float] = None,
+    controller_on: bool = False,
+    gt_ids: Optional[np.ndarray] = None,
+    n_pool: int = 0,
 ) -> LoadResult:
     done = [r for r in fe.completed if r.done]
     lat = np.array([r.latency_s for r in done], np.float64)
     queue = np.array([r.queue_s for r in done], np.float64)
     has = lat.size > 0
+    slo_attainment = float("nan")
+    if slo_ms is not None and has:
+        slo_attainment = float(np.mean(lat <= slo_ms / 1e3))
+    mean_recall = float("nan")
+    if gt_ids is not None and n_pool > 0 and done:
+        # open-loop points submit sequentially from one thread, so uid ==
+        # arrival index == query-pool index mod n_pool (the caller skips
+        # gt for closed loop, where per-client interleaving breaks this).
+        per_req = [
+            np.intersect1d(r.ids, gt_ids[r.uid % n_pool, : len(r.ids)]).size
+            / max(len(r.ids), 1)
+            for r in done
+        ]
+        mean_recall = float(np.mean(per_req))
     pct = (
         np.percentile(lat, (50, 95, 99)) if has else np.full(3, np.nan)
     )
@@ -209,6 +238,11 @@ def _summarize(
             1e3 * float((lat - queue).mean()) if has else float("nan")
         ),
         stage_breakdown=breakdown,
+        slo_ms=float("nan") if slo_ms is None else float(slo_ms),
+        slo_attainment=slo_attainment,
+        degraded=sum(1 for r in done if r.degraded),
+        controller_on=controller_on,
+        mean_recall=mean_recall,
     )
 
 
@@ -228,6 +262,10 @@ def run_load_point(
     collect_stats: bool = False,
     knob_mix: Optional[Sequence[tuple]] = None,
     telemetry=None,
+    controller=None,
+    deadline_ms: Optional[float] = None,
+    slo_ms: Optional[float] = None,
+    gt_ids: Optional[np.ndarray] = None,
 ) -> LoadResult:
     """Drive one offered-load point end to end and summarize it.
 
@@ -248,12 +286,23 @@ def run_load_point(
     ``stage_breakdown`` computed from the executor spans this point
     produced (isolated via the span-sink seq watermark, so one shared
     telemetry can serve a whole sweep).
+
+    ``controller`` (a fresh ``SLOController``) closes the loop for this
+    point: the frontend binds it, its retune thread runs for the
+    submission window, and degrade stays active through the drain.
+    ``deadline_ms`` stamps every submitted request with that latency
+    budget; ``slo_ms`` adds SLO-attainment accounting to the result
+    (independent knobs: a controller-off point typically sets both
+    ``deadline_ms`` and ``slo_ms`` to measure the baseline).  ``gt_ids``
+    (n_pool, >= topk) enables mean recall@topk accounting for open-loop
+    points — under degrade, recall is the other half of the A/B verdict.
     """
     if process not in PROCESSES:
         raise ValueError(f"process={process!r} — expected one of {PROCESSES}")
     fe = AsyncAnnFrontend(
         index, topk=topk, max_batch=max_batch, max_wait_ms=max_wait_ms,
         ef=ef, collect_stats=collect_stats, telemetry=telemetry,
+        controller=controller,
     )
     span_since = 0
     prev_telemetry = getattr(index, "telemetry", None)
@@ -265,10 +314,14 @@ def run_load_point(
     def _submit(j: int):
         if knob_mix:
             tk, efv = knob_mix[j % len(knob_mix)]
-            return fe.submit(queries[j % n_pool], topk=tk, ef=efv)
-        return fe.submit(queries[j % n_pool])
+            return fe.submit(
+                queries[j % n_pool], topk=tk, ef=efv, deadline_ms=deadline_ms
+            )
+        return fe.submit(queries[j % n_pool], deadline_ms=deadline_ms)
 
     fe.start()
+    if controller is not None:
+        controller.start()
     t0 = time.perf_counter()
     try:
         if process == "closed":
@@ -313,9 +366,15 @@ def run_load_point(
                 else:
                     time.sleep(min(t_next - now, 2e-3))
     finally:
-        fe.stop(drain=True)
-        if telemetry is not None:
-            index.attach_telemetry(prev_telemetry)
+        try:
+            if controller is not None:
+                # retune thread off first; degrade (frontend-driven) still
+                # covers the drain batches below
+                controller.stop()
+        finally:
+            fe.stop(drain=True)
+            if telemetry is not None:
+                index.attach_telemetry(prev_telemetry)
     elapsed = time.perf_counter() - t0
     return _summarize(
         fe,
@@ -326,6 +385,10 @@ def run_load_point(
         elapsed_s=elapsed,
         telemetry=telemetry,
         span_since=span_since,
+        slo_ms=slo_ms,
+        controller_on=controller is not None,
+        gt_ids=None if process == "closed" else gt_ids,
+        n_pool=n_pool,
     )
 
 
@@ -380,3 +443,43 @@ def sweep_load(
         for pi, frac in enumerate(load_fracs)
     ]
     return saturation, points
+
+
+def run_controller_ab(
+    index,
+    queries: np.ndarray,
+    *,
+    rate_qps: float,
+    slo_ms: float,
+    ef_ladder: Sequence[int],
+    process: str = "mmpp",
+    duration_s: float = 1.0,
+    seed: int = 0,
+    gt_ids: Optional[np.ndarray] = None,
+    controller_kw: Optional[dict] = None,
+    **kw,
+) -> tuple[LoadResult, LoadResult, SLOController]:
+    """Paired controller-off / controller-on load points (the ROADMAP's
+    acceptance experiment: an MMPP burst at 0.9x saturation, on beats off
+    on p99 without a recall cliff).
+
+    Both points run the SAME seeded arrival schedule, knobs, and
+    per-request ``deadline_ms = slo_ms``, so the only difference is the
+    bound controller (fresh per call — a controller binds one frontend).
+    Returns ``(off, on, controller)``; ``controller.snapshot()`` has the
+    decision counters behind the ``on`` point.
+    """
+    off = run_load_point(
+        index, queries, process=process, rate_qps=rate_qps,
+        duration_s=duration_s, seed=seed, deadline_ms=slo_ms, slo_ms=slo_ms,
+        gt_ids=gt_ids, **kw,
+    )
+    ctrl = SLOController(
+        slo_ms=slo_ms, ef_ladder=ef_ladder, **(controller_kw or {})
+    )
+    on = run_load_point(
+        index, queries, process=process, rate_qps=rate_qps,
+        duration_s=duration_s, seed=seed, deadline_ms=slo_ms, slo_ms=slo_ms,
+        gt_ids=gt_ids, controller=ctrl, **kw,
+    )
+    return off, on, ctrl

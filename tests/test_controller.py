@@ -1,0 +1,377 @@
+"""Closed-loop SLO controller: degrade determinism, retune policy, lifecycle.
+
+The controller's acceptance contract has three legs, each tested here
+deterministically (no wall-clock dependence — the frontend and controller
+share an injectable fake clock):
+
+* **degrade is pure policy over the mixed-knob batch path**: a request past
+  its ``deadline_ms`` at batch formation gets the ladder rung for how many
+  whole budgets it is late, on-time requests in the SAME formed batch keep
+  their knobs, and the results are bit-identical to the equivalent
+  hand-built per-request ``(topk, ef)`` batch;
+* **a controller decision never compiles**: after ``warm_traces(knobs=
+  ctrl.warm_knobs())``, controller-driven ef switches reuse existing
+  traces (retrace-sentinel assertion);
+* **bad budgets fail the SUBMITTER**: a negative/NaN ``deadline_ms``
+  raises at ``submit()`` and never reaches the batcher thread (the PR 5
+  validation contract extended to the new knob).
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import LannsConfig, LannsIndex
+from repro.core.brute_force import brute_force_topk
+from repro.data.synthetic import clustered_vectors
+from repro.obs import Telemetry
+from repro.serve.controller import SLOController
+from repro.serve.engine import AnnFrontend, AnnRequest, AsyncAnnFrontend
+from repro.serve.loadgen import run_controller_ab, run_load_point
+
+WAIT_S = 30.0
+LADDER = (32, 16)
+TOPK = 10
+
+
+class FakeClock:
+    """Deterministic clock shared by frontend + controller in these tests."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt_s: float) -> None:
+        self.t += dt_s
+
+
+@pytest.fixture(scope="module")
+def hnsw_setup():
+    """Single-segment HNSW index (ef actually matters; one segment keeps
+    the routed lane counts a pure function of group sizes, so the
+    zero-retrace assertion is deterministic), warmed for the degrade
+    ladder."""
+    data = clustered_vectors(2000, 16, n_clusters=16, seed=0)
+    queries = clustered_vectors(48, 16, n_clusters=16, seed=1)
+    cfg = LannsConfig(num_shards=1, num_segments=1, segmenter="apd",
+                      engine="hnsw", hnsw_m=8, ef_construction=50,
+                      ef_search=64)
+    idx = LannsIndex(cfg).build(data)
+    ctrl = SLOController(slo_ms=10.0, ef_ladder=LADDER)
+    idx.warm_traces(8, TOPK, knobs=ctrl.warm_knobs(topk=TOPK))
+    return idx, data, queries
+
+
+@pytest.fixture(scope="module")
+def scan_setup():
+    data = clustered_vectors(1200, 16, n_clusters=8, seed=0)
+    queries = clustered_vectors(32, 16, n_clusters=8, seed=1)
+    cfg = LannsConfig(num_shards=1, num_segments=2, segmenter="apd",
+                      engine="scan")
+    idx = LannsIndex(cfg).build(data)
+    idx.warm_traces(8, TOPK)
+    return idx, queries
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware degrade
+# ---------------------------------------------------------------------------
+
+
+def test_degrade_bit_identical_to_handbuilt_mixed_batch(hnsw_setup):
+    """Fake-clock determinism: in one formed batch, the request past its
+    deadline gets the ladder rung for its lateness, on-time requests keep
+    their knobs, and results match the hand-built mixed-knob query bit for
+    bit."""
+    idx, _, queries = hnsw_setup
+    clk = FakeClock()
+    ctrl = SLOController(slo_ms=10.0, ef_ladder=LADDER, clock=clk)
+    fe = AnnFrontend(idx, topk=TOPK, max_batch=8, max_wait_ms=1e9,
+                     clock=clk, controller=ctrl)
+    # t=0: 12 ms late at formation vs a 5 ms budget -> 2 whole budgets
+    # elapsed -> rung 1 (ladder[1] == 16)
+    r0 = fe.submit(queries[0], deadline_ms=5.0)
+    clk.advance(4e-3)
+    # t=4ms: 8 ms elapsed at formation, within its 20 ms budget
+    r1 = fe.submit(queries[1], deadline_ms=20.0)
+    # no explicit deadline: default budget mirrors slo_ms=10 -> on time
+    r2 = fe.submit(queries[2])
+    # already cheaper than any rung: a request's own ef is never RAISED
+    r3 = fe.submit(queries[3], ef=8, deadline_ms=1.0)
+    clk.advance(8e-3)  # formation at t=12ms
+    fe.flush()
+    assert [r.degraded for r in (r0, r1, r2, r3)] == [
+        True, False, False, False
+    ]
+    assert r0.ef_used == LADDER[1]
+    assert r1.ef_used is None and r2.ef_used is None  # index default ran
+    assert r3.ef_used == 8
+    assert ctrl.snapshot()["degraded"] == 1
+    # bit-identity vs the equivalent hand-built per-request knob batch
+    # (0 == index default in the executor's ef encoding)
+    q = np.stack([queries[j] for j in range(4)])
+    topk_arr = np.full(4, TOPK, np.int64)
+    ef_arr = np.array([LADDER[1], 0, 0, 8], np.int64)
+    d, i = idx.query(q, topk_arr, ef=ef_arr)
+    d, i = np.asarray(d), np.asarray(i)
+    for j, r in enumerate((r0, r1, r2, r3)):
+        assert np.array_equal(r.ids, i[j])
+        assert np.array_equal(r.dists, d[j])
+
+
+def test_degrade_rung_deepens_with_lateness(hnsw_setup):
+    """One rung per whole budget elapsed, clamped to the last rung."""
+    idx, _, queries = hnsw_setup
+    clk = FakeClock()
+    ctrl = SLOController(slo_ms=1e6, ef_ladder=LADDER, clock=clk)
+    fe = AnnFrontend(idx, topk=TOPK, max_batch=8, max_wait_ms=1e9,
+                     clock=clk, controller=ctrl)
+    r_rung0 = fe.submit(queries[0], deadline_ms=10.0)  # 1 budget late
+    r_clamp = fe.submit(queries[1], deadline_ms=2.0)  # 7+ budgets late
+    clk.advance(15e-3)
+    fe.flush()
+    assert r_rung0.ef_used == LADDER[0]
+    assert r_clamp.ef_used == LADDER[-1]
+
+
+def test_controller_ef_switch_never_retraces(hnsw_setup, retrace_sentinel):
+    """After ``warm_traces(knobs=ctrl.warm_knobs())``, controller-driven
+    ef switches (different degrade mixes, same group sizes) reuse existing
+    traces — the 'controller never triggers a compile' contract."""
+    idx, _, queries = hnsw_setup
+    clk = FakeClock()
+    ctrl = SLOController(slo_ms=10.0, ef_ladder=LADDER, clock=clk)
+    fe = AnnFrontend(idx, topk=TOPK, max_batch=8, max_wait_ms=1e9,
+                     clock=clk, controller=ctrl)
+
+    def run_mixed(late: set) -> list:
+        reqs = [
+            fe.submit(
+                queries[j],
+                deadline_ms=1.0 if j in late else 1e6,
+            )
+            for j in range(8)
+        ]
+        clk.advance(3.5e-3)  # 3 whole budgets late -> deepest rung
+        fe.flush()
+        return reqs
+
+    # first pass covers any residual best-effort-warming compiles for
+    # these exact group sizes (2 degraded / 6 default)
+    run_mixed({0, 3})
+    retrace_sentinel.reset()
+    reqs = run_mixed({2, 7})  # same sizes, different members/ef positions
+    assert sum(r.degraded for r in reqs) == 2
+    retrace_sentinel.assert_no_retrace("controller-driven ef switch")
+
+
+def test_degrade_disabled_without_budget(scan_setup):
+    """``default_deadline_ms=None`` leaves requests without explicit
+    deadlines untouched no matter how late they run."""
+    idx, queries = scan_setup
+    clk = FakeClock()
+    ctrl = SLOController(slo_ms=1.0, ef_ladder=LADDER,
+                         default_deadline_ms=None, clock=clk)
+    fe = AnnFrontend(idx, topk=TOPK, max_batch=4, max_wait_ms=1e9,
+                     clock=clk, controller=ctrl)
+    r = fe.submit(queries[0])
+    clk.advance(5.0)  # 5000x the SLO
+    fe.flush()
+    assert not r.degraded and ctrl.snapshot()["degraded"] == 0
+
+
+# ---------------------------------------------------------------------------
+# submit-time validation (PR 5 contract extended to deadline_ms)
+# ---------------------------------------------------------------------------
+
+
+def test_bad_deadline_fails_at_submit_not_in_batcher(scan_setup):
+    """A nonsensical deadline (negative, NaN, zero, inf) must raise in the
+    SUBMITTER's thread and leave the batcher (and every other request)
+    unharmed."""
+    idx, queries = scan_setup
+    with AsyncAnnFrontend(idx, topk=TOPK, max_batch=4, max_wait_ms=5.0) as fe:
+        for bad in (-1.0, float("nan"), 0.0, float("inf")):
+            with pytest.raises(ValueError, match="deadline_ms"):
+                fe.submit(queries[0], deadline_ms=bad)
+        good = fe.submit(queries[1], deadline_ms=50.0)
+        assert good.wait(WAIT_S) and good.done
+        assert good.deadline_ms == 50.0
+        assert fe.error is None
+    sync = AnnFrontend(idx, topk=TOPK, max_batch=4)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        sync.submit(queries[0], deadline_ms=float("nan"))
+
+
+def test_retune_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        AnnFrontend.retune(AnnFrontend.__new__(AnnFrontend), max_batch=0)
+    with pytest.raises(ValueError, match="max_wait_ms"):
+        AnnFrontend.retune(
+            AnnFrontend.__new__(AnnFrontend), max_wait_ms=float("nan")
+        )
+
+
+# ---------------------------------------------------------------------------
+# auto-tune policy
+# ---------------------------------------------------------------------------
+
+
+def test_retune_tighten_relax_hold_cycle(scan_setup):
+    """AIMD over fabricated telemetry: hot windows halve max_wait (floored),
+    cold windows relax it back (capped at the configured base), steady
+    state holds — and every tick is observable (controller span + labeled
+    counter)."""
+    idx, _ = scan_setup
+    tel = Telemetry()
+    ctrl = SLOController(slo_ms=10.0, ef_ladder=LADDER, min_wait_ms=0.5)
+    fe = AsyncAnnFrontend(idx, topk=TOPK, max_batch=8, max_wait_ms=4.0,
+                          telemetry=tel, controller=ctrl)
+    # empty window, empty queue, already at base -> hold
+    assert ctrl.retune_once() == "hold"
+    # a batch whose worst request blew the SLO -> tighten (4 -> 2 ms)
+    tel.spans.emit("batch", batch_kind="full_batches", b=8,
+                   exec_s=20e-3, queue_mean_s=1e-3, queue_max_s=5e-3)
+    assert ctrl.retune_once() == "tighten"
+    assert fe.max_wait_s == pytest.approx(2e-3)
+    # quiet windows relax multiplicatively back toward the base, capped
+    assert ctrl.retune_once() == "relax"
+    assert fe.max_wait_s == pytest.approx(3e-3)
+    assert ctrl.retune_once() == "relax"
+    assert fe.max_wait_s == pytest.approx(4e-3)  # capped at base
+    assert ctrl.retune_once() == "hold"
+    snap = ctrl.snapshot()
+    assert snap["ticks"] == 5 and snap["tighten"] == 1 and snap["relax"] == 2
+    assert len(tel.spans.events(kind="controller")) == 5
+    assert 'lanns_controller_retunes_total{action="tighten"} 1' in (
+        tel.registry.expose_text()
+    )
+    # repeated hot windows never push below the floor
+    for _ in range(10):
+        tel.spans.emit("batch", batch_kind="full_batches", b=8,
+                       exec_s=50e-3, queue_mean_s=0.0, queue_max_s=0.0)
+        ctrl.retune_once()
+    assert fe.max_wait_s == pytest.approx(0.5e-3)
+
+
+def test_retune_tightens_on_queue_depth_alone(scan_setup):
+    """Depth > 2x max_batch is a hot signal even with no batch spans (e.g.
+    telemetry-less frontends still get backpressure adaptation)."""
+    idx, queries = scan_setup
+    ctrl = SLOController(slo_ms=10.0, ef_ladder=LADDER)
+    fe = AsyncAnnFrontend(idx, topk=TOPK, max_batch=4, max_wait_ms=4.0,
+                          controller=ctrl)
+    with fe._cond:  # unstarted frontend: fabricate a deep queue
+        fe.pending.extend(
+            AnnRequest(j, queries[0], 0.0) for j in range(9)
+        )
+    assert ctrl.retune_once() == "tighten"
+    assert fe.max_wait_s == pytest.approx(2e-3)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle + construction
+# ---------------------------------------------------------------------------
+
+
+def test_constructor_validation():
+    good = dict(slo_ms=10.0, ef_ladder=(32, 16))
+    SLOController(**good)
+    for bad in (
+        dict(good, slo_ms=0.0),
+        dict(good, slo_ms=float("nan")),
+        dict(good, ef_ladder=()),
+        dict(good, ef_ladder=(16, 32)),  # ascending
+        dict(good, ef_ladder=(16, 16)),  # not strictly descending
+        dict(good, ef_ladder=(16, 0)),
+        dict(good, default_deadline_ms=-1.0),
+        dict(good, interval_s=0.0),
+        dict(good, min_wait_ms=0.0),
+        dict(good, tighten_factor=1.0),
+        dict(good, relax_factor=1.0),
+        dict(good, relax_margin=1.5),
+    ):
+        with pytest.raises(ValueError):
+            SLOController(**bad)
+
+
+def test_warm_knobs_covers_ladder():
+    ctrl = SLOController(slo_ms=5.0, ef_ladder=(48, 24, 12))
+    assert ctrl.warm_knobs() == [(None, 48), (None, 24), (None, 12)]
+    assert ctrl.warm_knobs(topk=20) == [(20, 48), (20, 24), (20, 12)]
+
+
+def test_lifecycle_and_binding(scan_setup):
+    idx, queries = scan_setup
+    ctrl = SLOController(slo_ms=10.0, ef_ladder=LADDER, interval_s=0.01)
+    with pytest.raises(RuntimeError, match="bind"):
+        ctrl.start()
+    assert ctrl.retune_once() == "unbound"  # tick before bind: a no-op
+    fe = AsyncAnnFrontend(idx, topk=TOPK, max_batch=4, max_wait_ms=1.0,
+                          controller=ctrl)
+    assert fe.controller is ctrl and ctrl.frontend is fe
+    # one controller binds one frontend
+    with pytest.raises(RuntimeError, match="already bound"):
+        AsyncAnnFrontend(idx, topk=TOPK, controller=ctrl)
+    ctrl.bind(fe)  # re-binding the same frontend is a no-op
+    with fe, ctrl:
+        with pytest.raises(RuntimeError, match="already started"):
+            ctrl.start()
+        req = fe.submit(queries[0], deadline_ms=100.0)
+        assert req.wait(WAIT_S)
+    assert not ctrl.running
+    ctrl.stop()  # idempotent
+    assert ctrl.snapshot()["ticks"] >= 0
+    # restart after stop works
+    ctrl.start()
+    ctrl.stop()
+
+
+# ---------------------------------------------------------------------------
+# loadgen integration: the A/B harness
+# ---------------------------------------------------------------------------
+
+
+def test_run_controller_ab_smoke(hnsw_setup):
+    """Paired off/on points: same seeded schedule, SLO accounting and
+    recall populated on both, controller decisions observable, rows
+    strict-JSON clean."""
+    idx, data, queries = hnsw_setup
+    gt_ids = np.asarray(brute_force_topk(queries, data, TOPK)[1])
+    tel = Telemetry()
+    off, on, ctrl = run_controller_ab(
+        idx, queries, rate_qps=200.0, slo_ms=8.0, ef_ladder=LADDER,
+        duration_s=0.3, seed=3, topk=TOPK, max_batch=8, max_wait_ms=2.0,
+        gt_ids=gt_ids, telemetry=tel,
+    )
+    for res in (off, on):
+        assert res.completed > 0 and res.completed == res.submitted
+        assert res.slo_ms == 8.0
+        assert 0.0 <= res.slo_attainment <= 1.0
+        assert 0.0 <= res.mean_recall <= 1.0
+    assert not off.controller_on and on.controller_on
+    assert off.degraded == 0  # no controller bound -> deadlines inert
+    snap = ctrl.snapshot()
+    assert snap["ticks"] > 0
+    assert snap["degraded"] == on.degraded
+    json.dumps(off.row())  # nan-cleaning holds for the new fields
+    json.dumps(on.row())
+
+
+def test_run_load_point_slo_accounting_without_controller(scan_setup):
+    """slo_ms alone adds attainment accounting; deadline_ms alone changes
+    nothing about the results."""
+    idx, queries = scan_setup
+    res = run_load_point(
+        idx, queries, process="poisson", rate_qps=200.0, duration_s=0.2,
+        topk=TOPK, max_batch=8, max_wait_ms=1.0, seed=7,
+        deadline_ms=1e6, slo_ms=1e6,
+    )
+    assert res.completed > 0
+    assert res.slo_attainment == 1.0  # a 1000 s SLO is always met
+    assert res.degraded == 0 and not res.controller_on
+    assert math.isnan(res.mean_recall)  # no gt supplied
