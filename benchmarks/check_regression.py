@@ -58,12 +58,16 @@ ABSOLUTE_MARKERS = ("recall",)
 #: for drift, never gating.  The closed-loop controller A/B metrics
 #: (``slo_attainment_*`` / ``p99_ratio_*`` from BENCH_controller.json) ride
 #: here while the policy calibrates across runners — promote them to gates
-#: by removing the markers once nightly history shows they hold.  All are
-#: reported (and land in the artifact rows) but never gate.  Checked FIRST:
-#: an info marker wins even when the key also matches a gating marker
-#: (``recall_mmpp_on`` is info, not absolute).
+#: by removing the markers once nightly history shows they hold.  Offline
+#: build wall times (``build_*`` from BENCH_build.json) are one-shot builds
+#: on shared runners — far too noisy to gate, tracked for drift (including
+#: ``build_bulk_speedup`` and ``build_recall_*``, which would otherwise
+#: match the gating markers).  All are reported (and land in the artifact
+#: rows) but never gate.  Checked FIRST: an info marker wins even when the
+#: key also matches a gating marker (``recall_mmpp_on`` is info, not
+#: absolute).
 INFO_MARKERS = ("mmpp", "footprint", "stage_", "slo_attainment",
-                "p99_ratio")
+                "p99_ratio", "build_")
 
 
 def _kind(name: str) -> str:

@@ -6,7 +6,13 @@ perShardTopK-trimmed two-level merging, and exact brute-force ground truth.
 """
 
 from repro.core.brute_force import brute_force_topk
-from repro.core.hnsw import HNSWConfig, HNSWIndex, FrozenHNSW
+from repro.core.hnsw import (
+    DEFAULT_BUILD_CHUNK,
+    FrozenHNSW,
+    HNSWConfig,
+    HNSWIndex,
+    HNSWIndexLegacy,
+)
 from repro.core.lanns import LannsConfig, LannsIndex
 from repro.core.plan import (
     QueryPlan,
@@ -35,8 +41,10 @@ from repro.core.segmenter import (
 from repro.core.sharding import TwoLevelPartitioner, hash_shard
 
 __all__ = [
+    "DEFAULT_BUILD_CHUNK",
     "HNSWConfig",
     "HNSWIndex",
+    "HNSWIndexLegacy",
     "FrozenHNSW",
     "LannsConfig",
     "LannsIndex",

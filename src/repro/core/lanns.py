@@ -37,7 +37,7 @@ from repro.common.utils import (
     next_pow2,
     next_pow2_quarter,
 )
-from repro.core.hnsw import HNSWConfig, HNSWIndex
+from repro.core.hnsw import DEFAULT_BUILD_CHUNK, HNSWConfig, HNSWIndex
 from repro.core.merge import per_shard_topk
 from repro.core.plan import (
     QueryPlanExecutor,
@@ -120,11 +120,11 @@ class LannsConfig:
 
 def _build_one_partition(args):
     """Worker: build one (shard, segment) engine.  Top-level for pickling."""
-    (s, g, vectors, keys, engine, hnsw_cfg) = args
+    (s, g, vectors, keys, engine, hnsw_cfg, chunk) = args
     t0 = time.perf_counter()
     if engine == "hnsw" and len(vectors) > 0:
         idx = HNSWIndex(hnsw_cfg, vectors.shape[1])
-        idx.add_batch(vectors, keys)
+        idx.add_batch(vectors, keys, chunk=chunk)
         frozen = idx.freeze()
         payload = {
             "kind": "hnsw",
@@ -138,6 +138,37 @@ def _build_one_partition(args):
     else:
         payload = {"kind": "scan", "vectors": vectors, "keys": keys}
     return s, g, payload, time.perf_counter() - t0
+
+
+def _summarize_seconds(secs: list) -> dict:
+    """Compact build-cost summary persisted in manifests in place of the
+    raw per-partition timing dict (which scales with partition count)."""
+    if not secs:
+        return {}
+    return {
+        "min": float(np.min(secs)),
+        "median": float(np.median(secs)),
+        "max": float(np.max(secs)),
+        "total": float(np.sum(secs)),
+        "count": len(secs),
+    }
+
+
+def _merge_seconds_summary(prior: dict, cur: dict) -> dict:
+    """min/max/total/count merge exactly across build runs; the merged
+    median is count-weighted (raw times are deliberately not persisted)."""
+    if not prior or not prior.get("count"):
+        return cur
+    if not cur or not cur.get("count"):
+        return prior
+    n0, n1 = prior["count"], cur["count"]
+    return {
+        "min": min(prior["min"], cur["min"]),
+        "median": (prior["median"] * n0 + cur["median"] * n1) / (n0 + n1),
+        "max": max(prior["max"], cur["max"]),
+        "total": prior["total"] + cur["total"],
+        "count": n0 + n1,
+    }
 
 
 def _batched_scan_topk(
@@ -495,13 +526,16 @@ class LannsIndex:
         *,
         workers: int = 0,
         resume_dir: Optional[str] = None,
+        chunk: int = DEFAULT_BUILD_CHUNK,
     ) -> "LannsIndex":
         """Partition + parallel per-partition index build.
 
         workers=0 builds in-process (deterministic single-thread); workers>0
         uses a process pool — one "executor" per partition, the paper's Spark
         model.  resume_dir enables checkpointed builds: finished partitions
-        are persisted and skipped on restart.
+        are persisted and skipped on restart.  ``chunk`` is the HNSW
+        wavefront batch size (throughput knob only: the built graph is
+        bit-identical for any chunk >= 1 and any worker count).
         """
         cfg = self.config
         data = np.asarray(data, dtype=np.float32)
@@ -527,7 +561,8 @@ class LannsIndex:
                     self.partitions[(s, g)] = self._load_partition(resume_dir, s, g)
                     continue
                 jobs.append(
-                    (s, g, data[rows], keys[rows], cfg.engine, cfg.hnsw_config())
+                    (s, g, data[rows], keys[rows], cfg.engine,
+                     cfg.hnsw_config(), chunk)
                 )
         with Timer() as t_build:
             if workers and len(jobs) > 1:
@@ -541,16 +576,40 @@ class LannsIndex:
             if resume_dir:
                 self._save_partition(resume_dir, s, g, payload)
         self._invalidate_stack()
+        summary = _summarize_seconds(list(per_partition_seconds.values()))
+        if resume_dir:
+            # resumed builds keep their build-cost provenance: fold the
+            # previous runs' summary (persisted in the manifest) into this
+            # run's — per-partition times themselves are not persisted.
+            summary = _merge_seconds_summary(
+                self._prior_seconds_summary(resume_dir), summary
+            )
         self.build_stats.update(
             assign_seconds=t_assign.seconds,
             build_wall_seconds=t_build.seconds,
             per_partition_seconds=per_partition_seconds,
+            per_partition_seconds_summary=summary,
             partition_sizes=assignment.partition_sizes().tolist(),
             total_stored=assignment.total_stored,
             n_input=n,
             duplication_factor=assignment.total_stored / max(n, 1),
+            build_workers=workers,
+            build_chunk=chunk,
         )
         return self
+
+    @staticmethod
+    def _prior_seconds_summary(resume_dir: str) -> dict:
+        manifest_path = os.path.join(resume_dir, "manifest.json")
+        if not os.path.exists(manifest_path):
+            return {}
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError):
+            return {}
+        stats = manifest.get("build_stats") or {}
+        return stats.get("per_partition_seconds_summary") or {}
 
     # -- query ---------------------------------------------------------------
 

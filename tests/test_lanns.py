@@ -219,7 +219,8 @@ def test_resumable_build(tmp_path, corpus):
     for g in (0, 1):
         rows = assignment.rows[0][g]
         s, gg, payload, _ = _build_one_partition(
-            (0, g, data[rows], np.arange(2000)[rows], "scan", cfg.hnsw_config())
+            (0, g, data[rows], np.arange(2000)[rows], "scan",
+             cfg.hnsw_config(), 256)
         )
         idx._save_partition(rdir, s, gg, payload)
 
